@@ -1,0 +1,34 @@
+"""Attention implementations: chunked-flash vs dense oracle (CPU functional
+timing + the memory-footprint argument that motivates chunking)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.layers.attention import chunked_attention, dense_attention
+
+
+def run():
+    rng = np.random.default_rng(0)
+    B, S, H, D = 1, 512, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+
+    dense = jax.jit(lambda q, k, v: dense_attention(q, k, v, causal=True))
+    emit("attention/dense_512", time_fn(dense, q, k, v, iters=3),
+         f"scores_bytes={B*H*S*S*4}")
+
+    for chunk in (128, 256):
+        ck = jax.jit(lambda q, k, v, c=chunk: chunked_attention(
+            q, k, v, causal=True, chunk=c))
+        emit(f"attention/chunked_{chunk}", time_fn(ck, q, k, v, iters=3),
+             f"flash_bytes={B*H*chunk*chunk*4}")
+
+    win = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, window=128, chunk=128))
+    emit("attention/window_128", time_fn(win, q, k, v, iters=3),
+         "subquadratic=True")

@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: banked conv + WS-GEMM variants (functional CPU
+timings + analytic VMEM working sets from banking.py)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.core.banking import plan_banks
+from repro.kernels import ref
+from repro.kernels.conv2d_ws import conv2d_ws
+from repro.kernels.matmul_ws import matmul_ws
+
+
+def run():
+    rng = np.random.default_rng(1)
+
+    # --- conv banking variants (paper M1/M2 sweep) -----------------------
+    x = jnp.asarray(rng.normal(size=(1, 64, 64, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 16, 16)), jnp.float32)
+    for cb, kb in [(1, 1), (4, 4), (8, 8)]:
+        plan = plan_banks(64, 64, 16, 16, in_bytes=4,
+                          cin_banks=cb, kout_banks=kb)
+        us = time_fn(lambda cb=cb, kb=kb: conv2d_ws(
+            x, w, cin_banks=cb, kout_banks=kb, interpret=True), iters=3)
+        emit(f"conv2d_ws/banks_{cb}x{kb}", us,
+             f"vmem_ws_bytes={plan.working_set_bytes}")
+
+    # --- int8 vs f32 datapath --------------------------------------------
+    xi = jnp.asarray(rng.integers(-128, 128, (1, 64, 64, 16)), jnp.int8)
+    wi = jnp.asarray(rng.integers(-128, 128, (3, 3, 16, 16)), jnp.int8)
+    us = time_fn(lambda: conv2d_ws(xi, wi, interpret=True), iters=3)
+    emit("conv2d_ws/int8", us, "accum=int32")
+
+    # --- WS-GEMM block sweep ----------------------------------------------
+    a = jnp.asarray(rng.normal(size=(512, 1024)), jnp.float32)
+    bmat = jnp.asarray(rng.normal(size=(1024, 512)), jnp.float32)
+    for bm, bk, bn in [(128, 256, 128), (256, 512, 256)]:
+        us = time_fn(lambda bm=bm, bk=bk, bn=bn: matmul_ws(
+            a, bmat, bm=bm, bk=bk, bn=bn, interpret=True), iters=3)
+        flops = 2 * 512 * 1024 * 512
+        emit(f"matmul_ws/b{bm}x{bk}x{bn}", us, f"flops={flops}")
+
+    # --- oracle baseline ---------------------------------------------------
+    us = time_fn(lambda: ref.matmul_ref(a, bmat), iters=3)
+    emit("matmul_ref/xla_cpu", us, "")

@@ -1,0 +1,39 @@
+"""MoE dispatch benchmark (paper-adjacent: the EP collective pattern the
+§Perf hillclimb optimizes).  CPU functional timings + dispatch statistics."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.configs.base import get_config, reduce_config
+from repro.layers.common import materialize
+from repro.layers.moe import _capacity, apply_moe, moe_specs
+
+
+def run():
+    for name in ("deepseek_moe_16b", "qwen3_moe_30b_a3b"):
+        cfg = reduce_config(get_config(name))
+        params = materialize(moe_specs(cfg), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 64, cfg.d_model)), jnp.float32)
+        fn = jax.jit(lambda p, x: apply_moe(p, x, cfg)[0])
+        us = time_fn(fn, params, x, iters=3)
+        m = cfg.moe
+        cap = _capacity((4 * 64) // 4, m)
+        emit(f"moe/{name}", us,
+             f"experts={m.num_experts};topk={m.top_k};capacity={cap}")
+
+        # drop-rate statistic at train capacity factor
+        logits = jnp.einsum("bsd,de->bse", x, params["router"])
+        _, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), m.top_k)
+        flat = idx.reshape(4, -1)
+        oh = jax.nn.one_hot(flat, m.num_experts, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=1) - oh
+        p = jnp.take_along_axis(pos, flat[..., None], -1)[..., 0]
+        drop = float(jnp.mean(p >= cap))
+        emit(f"moe/{name}/drop_rate", 0.0, f"dropped_frac={drop:.4f}")

@@ -1,0 +1,47 @@
+"""Benchmark for the paper's §5.2 simulation + Table 1 context.
+
+Reproduces the paper's own throughput model exactly and compares three
+executions of the same [224×224×8] ⊛ [8×3×3×8] layer:
+
+  a) the paper's FPGA IP core (analytic, 112 MHz Pynq Z2)   — 0.224 GOPS
+  b) 20 replicated IP cores (the paper's full-board figure) — 4.48 GOPS
+  c) one TPU v5e core running conv2d_ws (roofline model)    — the adapted
+     architecture's headroom
+  d) CPU-measured oracle + interpret-mode kernel (functional check only)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.core import ConvCore, ConvCoreConfig
+from repro.core.perfmodel import (IPCoreConfig, gops_macs, gops_paper,
+                                  psum_count, seconds, tpu_conv_roofline)
+from repro.kernels import ref
+
+
+def run():
+    n = psum_count(224, 224, 8, 8)
+    t1 = seconds(n)
+    emit("paper/psums", 0.0, f"count={n}")
+    emit("paper/ip_core_1x", t1 * 1e6, f"GOPS_paper={gops_paper(n):.3f}"
+         f";GOPS_macs={gops_macs(n):.3f}")
+    t20 = seconds(n, IPCoreConfig(ip_cores=20))
+    emit("paper/ip_core_20x", t20 * 1e6,
+         f"GOPS_paper={gops_paper(n, IPCoreConfig(ip_cores=20)):.2f}")
+
+    r = tpu_conv_roofline(224, 224, 8, 8)
+    emit("tpu_v5e/conv2d_ws_roofline", r["seconds"] * 1e6,
+         f"GOPS_paper={r['gops_paper']:.1f};bound="
+         f"{'memory' if r['t_memory'] > r['t_compute'] else 'compute'};"
+         f"speedup_vs_paper={t1 / r['seconds']:.0f}x")
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 224, 224, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 8, 8)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    core = ConvCore(ConvCoreConfig(backend="ref"))
+    us = time_fn(lambda: core.apply_layer(x, w, b), iters=3)
+    emit("cpu_host/conv_oracle", us, f"GOPS_paper={n / us / 1e3:.3f}")

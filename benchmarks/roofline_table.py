@@ -1,0 +1,73 @@
+"""Formats the dry-run matrix (experiments/dryrun/*.json) into the
+EXPERIMENTS.md roofline tables.  Usable as a bench (emits CSV) and as a
+report generator (python -m benchmarks.roofline_table --markdown)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.bench_util import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(d: str = DRYRUN_DIR) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if path.endswith("skips.json"):
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def load_skips(d: str = DRYRUN_DIR) -> List[Dict]:
+    p = os.path.join(d, "skips.json")
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def run():
+    for c in load_cells():
+        r = c["roofline"]
+        emit(f"dryrun/{c['arch']}/{c['shape']}/{c['mesh']}",
+             max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+             f"bottleneck={r['bottleneck']};mfu={r['mfu_at_roofline']:.3f};"
+             f"compile_s={c['compile_s']}")
+
+
+def markdown(d: str = DRYRUN_DIR) -> str:
+    rows = []
+    head = ("| arch | shape | mesh | chips | t_comp (s) | t_mem (s) | "
+            "t_coll (s) | bound | HLO GF/dev | useful | MFU@roofline | "
+            "HBM GB/dev |")
+    sep = "|" + "---|" * 12
+    rows.append(head)
+    rows.append(sep)
+    for c in load_cells(d):
+        r = c["roofline"]
+        ma = c.get("memory_analysis", {})
+        hbm = ma.get("total_hbm_bytes", 0) / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['chips']} "
+            f"| {r['t_compute']:.4f} | {r['t_memory']:.4f} "
+            f"| {r['t_collective']:.4f} | {r['bottleneck']} "
+            f"| {r['hlo_flops_dev']/1e9:.0f} | {r['useful_ratio']:.2f} "
+            f"| {r['mfu_at_roofline']:.3f} | {hbm:.1f} |")
+    for s in load_skips(d):
+        rows.append(f"| {s['arch']} | {s['shape']} | {s['mesh']} | — | — | — "
+                    f"| — | SKIP | — | — | — | — |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        print(markdown())
+    else:
+        run()

@@ -1,0 +1,83 @@
+"""End-to-end training driver with the production loop: checkpointing,
+fault-injection recovery, straggler monitoring, optional int8 gradient
+compression — on a llama-family model of configurable size.
+
+Default is laptop-scale; ``--preset 100m`` trains a ~100M-parameter model
+(a few hundred steps is a multi-hour CPU run; on TPU it is minutes).
+
+    PYTHONPATH=src python examples/train_llama_tiny.py --steps 60
+    PYTHONPATH=src python examples/train_llama_tiny.py --preset 100m \
+        --steps 300 --batch 32 --seq 512      # the full deliverable run
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduce_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.layers.common import materialize
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import init_state_specs, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build_config(preset: str):
+    base = get_config("llama3.2-3b")
+    if preset == "tiny":
+        return reduce_config(base)
+    if preset == "100m":
+        # ~100M params: 8L, d=768, 12H/4KV, ff=2048, 32k vocab
+        return dataclasses.replace(
+            base, num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32768, attn_chunk=256,
+            remat_policy="none", compute_dtype="float32")
+    raise ValueError(preset)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--preset", choices=("tiny", "100m"), default="tiny")
+    p.add_argument("--steps", type=int, default=60)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=1e-2)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_example")
+    p.add_argument("--fail-at", type=int, nargs="*", default=[],
+                   help="inject failures at these steps (recovery demo)")
+    args = p.parse_args()
+
+    cfg = build_config(args.preset)
+    from repro.configs.base import param_count
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"params≈{param_count(cfg)/1e6:.1f}M")
+
+    sspecs = init_state_specs(cfg)
+    state = {
+        "params": materialize(sspecs["params"], jax.random.PRNGKey(0)),
+        "opt": materialize(sspecs["opt"], jax.random.PRNGKey(1)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    pipe = make_pipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch, seed=0))
+    hp = AdamWConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                     total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, hp))
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps,
+                      checkpoint_every=max(args.steps // 5, 10),
+                      checkpoint_dir=args.ckpt_dir, log_every=10,
+                      fail_at_steps=tuple(args.fail_at)),
+        step_fn, pipe, state)
+    history = trainer.run()
+    print(f"done: loss {history[0]['loss']:.4f} → {history[-1]['loss']:.4f} "
+          f"({trainer.restarts} restarts, "
+          f"{len(trainer.monitor.events)} straggler events)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: the convolution IP-core architecture
+(channel banking × multi-kernel weight-stationary dataflow × load/compute
+pipelining × bias preload × 8-bit datapath), adapted to TPU.
+
+* ConvCore / ConvCoreConfig   — the layer-at-a-time IP core (paper §3–4)
+* perfmodel                   — the paper's §5.2 cycle/GOPS model, exact
+* banking                     — BRAM↔VMEM bank planning (§4.1)
+* quantize                    — the 8-bit datapath as reusable substrate
+"""
+
+from repro.core.convcore import ConvCore, ConvCoreConfig, paper_workload
+from repro.core import banking, perfmodel, quantize
+
+__all__ = ["ConvCore", "ConvCoreConfig", "paper_workload", "banking",
+           "perfmodel", "quantize"]

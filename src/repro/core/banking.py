@@ -1,0 +1,64 @@
+"""BRAM-bank ↔ VMEM-block mapping math (paper §4.1 → TPU v5e).
+
+The paper stores one quarter of the channels per BRAM (4 image BMGs) and a
+4×4 grid of kernel BMGs.  On TPU the analogous resource is VMEM: a grid
+step's working set is (image block + weight block + output block) × 2 for
+the double-buffered pipeline; this module sizes bank counts so the working
+set fits the per-core VMEM budget, and enforces the paper's
+divisible-by-4 invariant.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES_V5E = 128 * 1024 * 1024   # ~128 MiB per TensorCore
+
+
+@dataclass(frozen=True)
+class BankPlan:
+    cin_banks: int
+    kout_banks: int
+    image_block_bytes: int
+    weight_block_bytes: int
+    output_block_bytes: int
+
+    @property
+    def working_set_bytes(self) -> int:
+        # ×2: Pallas double-buffers input blocks (load/compute pipeline, M4)
+        return (2 * (self.image_block_bytes + self.weight_block_bytes)
+                + self.output_block_bytes)
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.working_set_bytes <= VMEM_BYTES_V5E
+
+
+def plan_banks(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
+               in_bytes: int = 1, acc_bytes: int = 4,
+               cin_banks: int = 4, kout_banks: int = 4,
+               vmem_budget: int = VMEM_BYTES_V5E) -> BankPlan:
+    """Start from the paper's 4×4 banking; double bank counts until the
+    working set fits VMEM (each doubling halves the per-bank block)."""
+    assert c % cin_banks == 0 and k % kout_banks == 0, (
+        "divisible-by-4 invariant (paper §4.1)")
+    oh, ow = h - kh + 1, w - kw + 1
+    while True:
+        cb, kb = c // cin_banks, k // kout_banks
+        plan = BankPlan(
+            cin_banks=cin_banks, kout_banks=kout_banks,
+            image_block_bytes=h * w * cb * in_bytes,
+            weight_block_bytes=kh * kw * cb * kb * in_bytes,
+            output_block_bytes=oh * ow * kb * acc_bytes,
+        )
+        if plan.fits_vmem or (cb == 1 and kb == 1):
+            return plan
+        if plan.image_block_bytes >= plan.output_block_bytes and cb > 1 \
+                and c % (cin_banks * 2) == 0:
+            cin_banks *= 2
+        elif kb > 1 and k % (kout_banks * 2) == 0:
+            kout_banks *= 2
+        elif cb > 1 and c % (cin_banks * 2) == 0:
+            cin_banks *= 2
+        else:
+            return plan

@@ -1,0 +1,110 @@
+"""ConvCore — the paper's IP core as a composable JAX module.
+
+Semantics follow the paper exactly (§3–4): the core processes **one
+convolutional layer at a time**; it accepts a C-channel feature-map stack and
+K C-channel kernels, and produces a K-channel feature map.  Bias is
+*preloaded* into the output accumulator (M5).  C and K must satisfy the
+divisible-by-4 banking invariant (§4.1) for the faithful (4,4)
+configuration; bank counts are parameterizable for TPU block-size tuning
+(banking.py picks VMEM-fitting counts).
+
+Backends:
+* "pallas"  — kernels/conv2d_ws.py, the TPU-native dataflow (interpret mode
+  on CPU);
+* "ref"     — pure-jnp oracle (lax.conv), used for training graphs/vjp.
+
+The int8 path mirrors the paper's 8-bit datapath: int8 features/weights →
+int32 psum accumulation → requantize (or wrap8 for waveform fidelity).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import banking
+from repro.core.quantize import Quantized, quantize_symmetric
+from repro.kernels import ops, ref
+
+
+@dataclass(frozen=True)
+class ConvCoreConfig:
+    cin_banks: int = 4            # paper: 4 image BMGs / computing cores (M1)
+    kout_banks: int = 4           # paper: 4 PCOREs per core (M2)
+    backend: str = "pallas"       # pallas | ref
+    int8: bool = False            # the paper's 8-bit datapath
+    wrap8: bool = False           # bit-faithful 8-bit psum wrap (Fig. 6)
+    auto_bank: bool = False       # let banking.py grow banks to fit VMEM
+
+
+class ConvCore:
+    """One paper IP core.  Use ``apply_layer`` per convolutional layer."""
+
+    def __init__(self, config: ConvCoreConfig = ConvCoreConfig()):
+        self.config = config
+
+    def plan(self, x_shape, w_shape) -> banking.BankPlan:
+        n, h, w_, c = x_shape
+        kh, kw, _, k = w_shape
+        cfg = self.config
+        in_bytes = 1 if cfg.int8 else 4
+        if cfg.auto_bank:
+            return banking.plan_banks(h, w_, c, k, kh, kw, in_bytes=in_bytes,
+                                      cin_banks=cfg.cin_banks,
+                                      kout_banks=cfg.kout_banks)
+        cb, kb = c // cfg.cin_banks, k // cfg.kout_banks
+        oh, ow = h - kh + 1, w_ - kw + 1
+        return banking.BankPlan(cfg.cin_banks, cfg.kout_banks,
+                                h * w_ * cb * in_bytes,
+                                kh * kw * cb * kb * in_bytes,
+                                oh * ow * kb * 4)
+
+    def apply_layer(self, x: jax.Array, w: jax.Array,
+                    bias: Optional[jax.Array] = None,
+                    out_scale: Optional[jax.Array] = None) -> jax.Array:
+        """x: [N,H,W,C] ⊛ w: [KH,KW,C,K] (+bias [K]) → [N,OH,OW,K]."""
+        cfg = self.config
+        plan = self.plan(x.shape, w.shape)
+        if cfg.int8:
+            assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+        if cfg.backend == "ref":
+            if cfg.int8:
+                out = ref.conv2d_ref_int8(x, w, bias)
+                if cfg.wrap8:
+                    return out.astype(jnp.int8)
+                if out_scale is not None:
+                    return jnp.clip(jnp.round(
+                        out.astype(jnp.float32) * out_scale),
+                        -128, 127).astype(jnp.int8)
+                return out
+            return ref.conv2d_ref(x, w, bias)
+        return ops.conv2d(x, w, bias, cin_banks=plan.cin_banks,
+                          kout_banks=plan.kout_banks,
+                          wrap8=cfg.wrap8, out_scale=out_scale)
+
+    def apply_quantized_layer(self, x_f32: jax.Array, w_f32: jax.Array,
+                              bias_f32: Optional[jax.Array] = None):
+        """Float-in/float-out convenience: symmetric int8 quantization of
+        activations + weights, int32 accumulate, dequantize (the edge-AI
+        deployment path the paper targets)."""
+        xq = quantize_symmetric(x_f32)
+        wq = quantize_symmetric(w_f32)
+        bias_i32 = None
+        if bias_f32 is not None:
+            bias_i32 = jnp.round(
+                bias_f32.astype(jnp.float32) / (xq.scale * wq.scale)
+            ).astype(jnp.int32)
+        core = ConvCore(ConvCoreConfig(
+            cin_banks=self.config.cin_banks,
+            kout_banks=self.config.kout_banks,
+            backend=self.config.backend, int8=True))
+        acc = core.apply_layer(xq.values, wq.values, bias_i32)
+        return acc.astype(jnp.float32) * (xq.scale * wq.scale)
+
+
+def paper_workload():
+    """The exact §5.2 simulation workload shapes."""
+    return {"x": (1, 224, 224, 8), "w": (3, 3, 8, 8), "bias": (8,)}

@@ -1,0 +1,83 @@
+"""Analytic cycle/throughput model of the paper's IP core (§5.2).
+
+Reproduces the paper's own numbers exactly:
+
+* [224×224×8] ⊛ [8×3×3×8] → 3,154,176 psums (= 222·222·8·8),
+* the 4-core system computes 16 psums / 8 cycles,
+* at 112 MHz (Pynq Z2 synthesis, Table 1) → 0.01408 s,
+* paper-GOPS (= psums/second): 0.224; 20 replicated IP cores: 4.48.
+
+The paper counts one psum (a 3×3×1 weighted sum) as one "operation"; we
+also report standard MAC-ops (1 psum = KH·KW MACs = 2·KH·KW flops) so the
+numbers are comparable with TPU rooflines (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class IPCoreConfig:
+    clock_hz: float = 112e6        # Pynq Z2 synthesis (Table 1)
+    computing_cores: int = 4       # channel-parallel cores (M1)
+    pcores_per_core: int = 4       # kernels in flight per core (M2)
+    cycles_per_batch: int = 8      # "four psum values for each eight cycles"
+    ip_cores: int = 1              # replicated IP cores on the fabric
+
+
+def psum_count(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3) -> int:
+    """One psum per (output pixel × kernel × input channel)."""
+    oh, ow = h - kh + 1, w - kw + 1
+    return oh * ow * k * c
+
+
+def cycles(n_psums: int, cfg: IPCoreConfig = IPCoreConfig()) -> int:
+    per_batch = cfg.computing_cores * cfg.pcores_per_core  # 16 psums
+    batches = -(-n_psums // (per_batch * cfg.ip_cores))
+    return batches * cfg.cycles_per_batch
+
+
+def seconds(n_psums: int, cfg: IPCoreConfig = IPCoreConfig()) -> float:
+    return cycles(n_psums, cfg) / cfg.clock_hz
+
+
+def gops_paper(n_psums: int, cfg: IPCoreConfig = IPCoreConfig()) -> float:
+    """The paper's accounting: psums per second / 1e9."""
+    return n_psums / seconds(n_psums, cfg) / 1e9
+
+
+def gops_macs(n_psums: int, kh: int = 3, kw: int = 3,
+              cfg: IPCoreConfig = IPCoreConfig()) -> float:
+    """Standard accounting: 1 psum = KH·KW MACs = 2·KH·KW ops."""
+    return n_psums * 2 * kh * kw / seconds(n_psums, cfg) / 1e9
+
+
+def paper_reference_numbers():
+    """The exact §5.2 workload; asserted in tests/test_perfmodel.py."""
+    n = psum_count(224, 224, 8, 8)
+    one = IPCoreConfig()
+    twenty = IPCoreConfig(ip_cores=20)
+    return {
+        "psums": n,
+        "seconds_1core": seconds(n, one),
+        "gops_1core": gops_paper(n, one),
+        "gops_20cores": gops_paper(n, twenty),
+        "gops_macs_1core": gops_macs(n, cfg=one),
+    }
+
+
+def tpu_conv_roofline(h: int, w: int, c: int, k: int, kh: int = 3,
+                      kw: int = 3, in_bytes: int = 1,
+                      peak_flops: float = 197e12 / 2,  # int8 ≈ bf16 on v5e MXU
+                      hbm_bw: float = 819e9):
+    """Roofline terms for the same layer on one v5e core (conv2d_ws kernel):
+    used for the paper-vs-TPU comparison table in benchmarks."""
+    oh, ow = h - kh + 1, w - kw + 1
+    flops = 2.0 * oh * ow * k * c * kh * kw
+    bytes_moved = (h * w * c + kh * kw * c * k) * in_bytes + oh * ow * k * 4
+    t = max(flops / peak_flops, bytes_moved / hbm_bw)
+    return {"flops": flops, "bytes": bytes_moved,
+            "t_compute": flops / peak_flops, "t_memory": bytes_moved / hbm_bw,
+            "seconds": t, "gops_macs": flops / t / 1e9,
+            "gops_paper": (oh * ow * k * c) / t / 1e9}

@@ -1,0 +1,168 @@
+"""int8 quantization — the paper's 8-bit datapath, as a reusable substrate.
+
+Used three ways in this framework (DESIGN.md §3):
+1. the ConvCore int8 inference path (quantize activations/weights → int8
+   kernel → requantize), matching the paper's 8-bit features/weights;
+2. w8a8 serving for the LM stack (per-channel weight scales);
+3. gradient all-reduce compression with error feedback (the beyond-paper
+   application of the same idea to the DP collective — see
+   distributed/compression.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    values: jax.Array              # int8
+    scale: jax.Array               # f32; per-tensor [] or per-channel [...,1]
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def quantize_symmetric(x: jax.Array, axis: Optional[int] = None) -> Quantized:
+    """Symmetric int8: scale = max|x| / 127 (per tensor or per channel)."""
+    xf = x.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(xf))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -128, 127).astype(jnp.int8)
+        return Quantized(q, scale)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -128, 127).astype(jnp.int8)
+    return Quantized(q, scale)
+
+
+def quantized_matmul(x: jax.Array, wq: Quantized,
+                     use_kernel: bool = True) -> jax.Array:
+    """w8a8 GEMM: quantize activations per-tensor, int8×int8→int32 through
+    the paper-dataflow kernel, rescale to f32."""
+    xq = quantize_symmetric(x.reshape(-1, x.shape[-1]))
+    if use_kernel:
+        from repro.kernels import ops
+        acc = ops.matmul_ws(xq.values, wq.values)
+    else:
+        from repro.kernels.ref import matmul_ref_int8
+        acc = matmul_ref_int8(xq.values, wq.values)
+    out = acc.astype(jnp.float32) * xq.scale * wq.scale.reshape(1, -1)
+    return out.reshape(*x.shape[:-1], wq.values.shape[-1])
+
+
+def quantize_params_for_serving(params, axis: int = 0):
+    """Per-output-channel int8 quantization of every 2-D weight matrix."""
+    def q(p):
+        if p.ndim == 2:
+            return quantize_symmetric(p, axis=axis)
+        return p
+    return jax.tree.map(q, params)
+
+
+# ---------------------------------------------------------------------------
+# w8a8 serving (paper 8-bit datapath → LM weights; §Perf iteration C1)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight_specs(pspecs, exclude: tuple = ("embedding",)):
+    """ParamSpec tree → w8 spec tree: every ≥2-D weight becomes
+    {"q": int8 spec, "s": per-last-dim f32 scale spec}.
+
+    The scale varies only along the LAST dimension, which by this repo's
+    spec conventions is never contracted in the consuming einsum — so
+    rescaling after the int8 dot is exact.  1-D tensors (norm scales,
+    biases) stay f32; embedding tables stay f32 (the tied-logits einsum
+    contracts their last dim).  Sharding axes carry over unchanged."""
+    from repro.layers.common import ParamSpec, spec_map
+
+    def f(s):
+        eff_ndim = len(s.shape) - (1 if s.axes and s.axes[0] == "stack" else 0)
+        if eff_ndim < 2 or s.dtype != "float32":
+            return s
+        # scanned params keep their stack dim in the scale (per-layer scales)
+        lead = s.shape[0] if s.axes and s.axes[0] == "stack" else 1
+        lead_ax = s.axes[0] if lead != 1 else None
+        scale_shape = (lead,) + (1,) * (len(s.shape) - 2) + (s.shape[-1],)
+        scale_axes = (lead_ax,) + (None,) * (len(s.shape) - 2) + (s.axes[-1],)
+        return {"q": ParamSpec(s.shape, s.axes, dtype="int8"),
+                "s": ParamSpec(scale_shape, scale_axes, dtype="float32")}
+
+    return {k: (v if k in exclude else spec_map(f, v))
+            for k, v in pspecs.items()}
+
+
+def quantize_weights(params, pspecs=None, exclude: tuple = ("embedding",)):
+    """Materialized f32 params → the w8 tree (serving deployment path).
+
+    pspecs: the (unquantized) ParamSpec tree; used to skip stacked 1-D
+    tensors (norm scales carry a leading scan dim).  Without it, plain
+    ndim≥2 float tensors are quantized."""
+    from repro.layers.common import is_spec
+
+    def decide(p, s):
+        if not hasattr(p, "ndim") or p.dtype not in (jnp.float32,
+                                                     jnp.bfloat16):
+            return p
+        eff = p.ndim - (1 if s is not None and s.axes
+                        and s.axes[0] == "stack" else 0)
+        if eff < 2:
+            return p
+        q = quantize_symmetric(p, axis=tuple(range(p.ndim - 1)))
+        return {"q": q.values, "s": q.scale.astype(jnp.float32)}
+
+    out = {}
+    for k, v in params.items():
+        if k in exclude:
+            out[k] = v
+        elif pspecs is not None:
+            out[k] = jax.tree.map(decide, v, jax.tree.map(
+                lambda s: s, pspecs[k], is_leaf=is_spec),
+                is_leaf=lambda x: hasattr(x, "ndim"))
+        else:
+            out[k] = jax.tree.map(lambda p: decide(p, None), v)
+    return out
+
+
+def w8_einsum(subscripts: str, x: jax.Array, w_q: jax.Array,
+              w_s: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """True int8×int8 GEMM (the paper's datapath): dynamic per-tensor
+    activation quantization, s8 dot with int32 accumulation, rescale.
+    The HLO dot reads int8 operands — HBM traffic genuinely halves vs bf16
+    (this is what the decode roofline measures)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    sx = jnp.maximum(amax, 1e-12) / 127.0
+    xq = jnp.clip(jnp.round(xf / sx), -128, 127).astype(jnp.int8)
+    acc = jnp.einsum(subscripts, xq, w_q,
+                     preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * sx * w_s.reshape(-1).astype(jnp.float32)
+    return out.astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback compressor (for gradient all-reduce compression)
+# ---------------------------------------------------------------------------
+
+
+class EFState(NamedTuple):
+    residual: jax.Array            # f32 carry of quantization error
+
+
+def ef_compress(g: jax.Array, state: Optional[EFState]) -> Tuple[Quantized, EFState]:
+    """int8-compress a gradient with error feedback: the quantization error
+    is carried into the next step so compression noise is unbiased over
+    time (Seide et al. 1-bit SGD lineage)."""
+    gf = g.astype(jnp.float32)
+    if state is not None:
+        gf = gf + state.residual
+    q = quantize_symmetric(gf)
+    err = gf - q.dequantize()
+    return q, EFState(residual=err)
+
+
+def ef_decompress(q: Quantized) -> jax.Array:
+    return q.dequantize()

@@ -1,0 +1,60 @@
+"""Gradient all-reduce compression (int8 + error feedback).
+
+The paper's 8-bit datapath, applied to the distributed-optimization layer:
+cross-pod (DCN) gradient reduction is bandwidth-starved relative to ICI, so
+we int8-compress gradients before the pod-axis reduction and carry the
+quantization error into the next step (error feedback keeps the noise
+unbiased over time).
+
+Two integration modes:
+* value-level (default here, CPU-testable): compress→decompress around the
+  optimizer — numerically identical to compressing the wire payload when
+  the reduction is a mean of identically-scaled shards;
+* wire-level (real pods): wrap the DP all-reduce in shard_map and move the
+  int8 payload + per-tensor scale through jax.lax.psum — same math, the
+  hook is ``compressed_psum`` below.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import EFState, ef_compress
+
+PyTree = Any
+
+
+def init_ef_state(params: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda p: EFState(residual=jnp.zeros(p.shape, jnp.float32)), params,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, EFState))
+
+
+def compress_grads(grads: PyTree, ef: Optional[PyTree]) -> Tuple[PyTree, PyTree]:
+    """int8-round-trip every gradient leaf with error feedback.
+    Returns (decompressed_grads, new_ef_state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = (jax.tree.leaves(ef, is_leaf=lambda x: isinstance(x, EFState))
+                 if ef is not None else [None] * len(leaves))
+    outs, states = [], []
+    for g, s in zip(leaves, ef_leaves):
+        q, ns = ef_compress(g, s)
+        outs.append(q.dequantize().astype(g.dtype))
+        states.append(ns)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, states))
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Wire-level hook (use inside shard_map): quantize to int8, psum the
+    int8 payload and the scales, dequantize.  Sum of int8 shards fits int32;
+    scale averaging keeps the estimate unbiased for similar shard scales."""
+    from repro.core.quantize import quantize_symmetric
+    q = quantize_symmetric(x)
+    acc = jax.lax.psum(q.values.astype(jnp.int32), axis_name)
+    # max-scale upper bound keeps the reconstruction conservative
+    scale = jax.lax.pmax(q.scale, axis_name)
+    return acc.astype(jnp.float32) * scale

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see ops.py for
+the public jit'd wrappers and ref.py for the pure-jnp oracles).
+
+* conv2d_ws        — the paper's IP core: channel-banked, weight-stationary,
+                     bias-preloaded blocked convolution (+int8/wrap8 modes)
+* matmul_ws        — the same dataflow generalized to transformer GEMMs
+                     (custom VJP for training use)
+* flash_attention  — beyond-paper: flash attention with the paper's
+                     load/compute pipelining on the KV stream
+"""

@@ -1,0 +1,104 @@
+"""The paper's IP core as a Pallas TPU kernel: weight-stationary, channel-
+banked, bias-preloaded blocked convolution.
+
+Mapping of the FPGA architecture (DESIGN.md §3):
+
+* grid = (N, kout_banks, cin_banks) — co innermost: "PSUM values of each
+  core get accumulated continually into the output BRAMs until the
+  processing depth is finished" (§4.2), then the next kernel set (ko).
+* the weight block (the Weight Loader contents) is VMEM-resident for the
+  whole spatial sweep of a grid step — weight-stationary;
+* the output block is revisited across the cin sweep and *initialized with
+  the bias at cin step 0* — the paper's bias-preload trick (M5), so bias
+  costs zero extra passes;
+* the 3×3 window is computed as KH·KW shifted (HW×Cb)@(Cb×Kb) MXU matmuls
+  — the systolic-array form of "9 MACs + adder tree" per PCORE;
+* Pallas's software pipeline double-buffers the HBM→VMEM block DMA against
+  MXU compute across grid steps — the paper's two-stage load/compute
+  pipeline (M4).
+
+int8 mode: int8×int8 → int32 accumulation (the production reading of the
+paper's 8-bit datapath).  The bit-exact wrap-around-in-8-bit mode of the
+Fig. 6 waveform lives in ops.conv2d (wrap8=True) on top of the int32 result.
+
+Spatial extent is kept whole per block (edge-size feature maps fit VMEM
+comfortably: 224×224×Cb int8 ≈ 0.4 MiB/bank); banking.py checks the VMEM
+budget and picks bank counts for larger maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, acc_dtype):
+    co = pl.program_id(2)
+
+    oh, ow, kb = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    cb = x_ref.shape[3]
+
+    # M5: bias preload — initialize the output accumulator with the bias on
+    # the first channel bank, exactly like preloading the output BRAMs.
+    @pl.when(co == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(
+            b_ref[...].astype(acc_dtype), o_ref.shape)
+
+    acc = o_ref[0]                                     # [OH, OW, KB]
+    x = x_ref[0]                                       # [H, W, CB]
+    # KH×KW shifted matmuls — the 9-MAC adder tree on the MXU
+    for dy in range(kh):
+        for dx in range(kw):
+            xs = jax.lax.dynamic_slice(
+                x, (dy, dx, 0), (oh, ow, cb)).reshape(oh * ow, cb)
+            wk = w_ref[dy, dx]                         # [CB, KB]
+            acc = acc + jnp.dot(
+                xs, wk, preferred_element_type=acc_dtype
+            ).reshape(oh, ow, kb)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("cin_banks", "kout_banks",
+                                             "interpret"))
+def conv2d_ws(x, w, bias=None, *, cin_banks: int = 4, kout_banks: int = 4,
+              interpret: bool = False):
+    """VALID stride-1 conv, paper dataflow.
+
+    x: [N,H,W,C]; w: [KH,KW,C,K]; bias: [K] or None → [N,OH,OW,K]
+    (f32 accumulate for float inputs, int32 for int8 inputs).
+
+    cin_banks/kout_banks default to the paper's 4×4 banking; C and K must
+    divide by them (the paper's divisible-by-4 invariant, §4.1).
+    """
+    n, h, w_dim, c = x.shape
+    kh, kw, c2, k = w.shape
+    assert c == c2, (c, c2)
+    assert c % cin_banks == 0 and k % kout_banks == 0, (
+        "paper banking invariant: C and K divisible by the bank counts")
+    oh, ow = h - kh + 1, w_dim - kw + 1
+    cb, kb = c // cin_banks, k // kout_banks
+
+    int_path = x.dtype == jnp.int8
+    acc_dtype = jnp.int32 if int_path else jnp.float32
+    if bias is None:
+        bias = jnp.zeros((k,), acc_dtype)
+    bias = bias.astype(acc_dtype)
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, acc_dtype=acc_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, kout_banks, cin_banks),
+        in_specs=[
+            pl.BlockSpec((1, h, w_dim, cb), lambda b, ko, co: (b, 0, 0, co)),
+            pl.BlockSpec((kh, kw, cb, kb), lambda b, ko, co: (0, 0, co, ko)),
+            pl.BlockSpec((kb,), lambda b, ko, co: (ko,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, kb), lambda b, ko, co: (b, 0, 0, ko)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, k), acc_dtype),
+        interpret=interpret,
+    )(x, w, bias)
+    return out

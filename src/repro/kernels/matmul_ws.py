@@ -1,0 +1,78 @@
+"""Weight-stationary blocked GEMM — the paper's dataflow generalized to the
+matmuls that dominate transformers (a 1×1 convolution *is* a GEMM; this is
+the TPU-native statement of the IP-core architecture — DESIGN.md §4).
+
+Same four mechanisms as conv2d_ws:
+* grid = (N-blocks, K-blocks, M-blocks), m innermost → the weight block
+  w[kb, nb] stays VMEM-resident across the whole M (token) stream
+  (weight-stationary: the Weight Loader);
+* contraction (K) banking with output-block revisiting & accumulation
+  (channel banks → PSUM accumulation into the output BRAM);
+* bias preload at the first contraction bank (M5);
+* Pallas double-buffered block DMA = the load/compute pipeline (M4).
+
+int8×int8→int32 supported (the 8-bit datapath).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, acc_dtype):
+    ko = pl.program_id(1)
+
+    @pl.when(ko == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(
+            b_ref[...].astype(acc_dtype), o_ref.shape)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=acc_dtype)
+
+
+def _pick(total: int, target: int) -> int:
+    """Largest divisor of ``total`` that is ≤ target (tile-friendly)."""
+    t = min(target, total)
+    while total % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_ws(x, w, bias=None, *, bm: int = 256, bk: int = 512, bn: int = 256,
+              interpret: bool = False):
+    """x: [M,K] @ w: [K,N] (+bias [N]) → [M,N] (f32, or int32 for int8 in).
+
+    Default blocks: bm×bk×bn = 256×512×256 → VMEM working set
+    (x 256×512 + w 512×256 + out 256×256) ≈ 0.9 MiB in bf16/f32 with double
+    buffering — far under the ~128 MiB v5e budget, MXU-aligned (×128).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bk, bn = _pick(m, bm), _pick(k, bk), _pick(n, bn)
+
+    int_path = x.dtype == jnp.int8
+    acc_dtype = jnp.int32 if int_path else jnp.float32
+    if bias is None:
+        bias = jnp.zeros((n,), acc_dtype)
+    bias = bias.astype(acc_dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, acc_dtype=acc_dtype),
+        grid=(n // bn, k // bk, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda no, ko, mo: (mo, ko)),
+            pl.BlockSpec((bk, bn), lambda no, ko, mo: (ko, no)),
+            pl.BlockSpec((bn,), lambda no, ko, mo: (no,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda no, ko, mo: (mo, no)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        interpret=interpret,
+    )(x, w, bias)
+    return out

@@ -1,0 +1,101 @@
+"""Public jit'd kernel wrappers.
+
+* auto-select interpret mode on CPU (the host platform cannot lower Mosaic;
+  interpret=True executes the kernel body in Python — the validation mode
+  this container uses; on TPU the same call compiles natively);
+* ``matmul_ws`` carries a custom VJP so the paper-dataflow GEMM is usable
+  inside training graphs (backward = two more WS-GEMMs);
+* ``conv2d`` adds the requantization / wrap8 modes of the 8-bit datapath.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d_ws as _conv_mod
+from repro.kernels import matmul_ws as _mm_mod
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# GEMM with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def matmul_ws(x, w, bias=None):
+    return _matmul_fwd_impl(x, w, bias)
+
+
+def _matmul_fwd_impl(x, w, bias):
+    out = _mm_mod.matmul_ws(x, w, bias, interpret=_interpret())
+    if x.dtype == jnp.int8:
+        return out
+    return out.astype(x.dtype)
+
+
+def _matmul_fwd(x, w, bias):
+    return _matmul_fwd_impl(x, w, bias), (x, w, bias is not None)
+
+
+def _matmul_bwd(res, g):
+    x, w, has_bias = res
+    gf = g.astype(x.dtype)
+    dx = _mm_mod.matmul_ws(gf, w.T, interpret=_interpret()).astype(x.dtype)
+    dw = _mm_mod.matmul_ws(x.T, gf, interpret=_interpret()).astype(w.dtype)
+    db = jnp.sum(g, axis=0) if has_bias else None
+    return dx, dw, db
+
+
+matmul_ws.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Convolution (the IP core entry point)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, bias=None, *, cin_banks: int = 4, kout_banks: int = 4,
+           wrap8: bool = False, out_scale=None):
+    """Paper-dataflow convolution.
+
+    float in → f32 out; int8 in → int32 out, then
+      * wrap8=True: wrap to int8 (bit-matches the paper's Fig. 6 waveform),
+      * out_scale: requantize (int32 × scale → int8), the production path.
+    """
+    out = _conv_mod.conv2d_ws(x, w, bias, cin_banks=cin_banks,
+                              kout_banks=kout_banks, interpret=_interpret())
+    if x.dtype == jnp.int8:
+        if wrap8:
+            return out.astype(jnp.int8)
+        if out_scale is not None:
+            scaled = jnp.round(out.astype(jnp.float32) * out_scale)
+            return jnp.clip(scaled, -128, 127).astype(jnp.int8)
+    return out
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512):
+    """Pallas flash attention (beyond-paper kernel; see
+    kernels/flash_attention.py).  On TPU this replaces the pure-JAX
+    chunked attention for prefill/train (cfg.attn_impl == "flash");
+    interpret mode validates it on CPU."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    return _fa(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+               interpret=_interpret())
+
+
+def conv1d_depthwise(x, w, bias=None):
+    """Causal depthwise temporal conv via the WS-GEMM dataflow.
+
+    x: [B,S,W], w: [K,W].  Depthwise conv = K shifted elementwise MACs —
+    on TPU these fuse into the surrounding ops; routed through the ref
+    implementation (the conv2d kernel targets the paper's dense conv)."""
+    from repro.kernels.ref import conv1d_depthwise_ref
+    return conv1d_depthwise_ref(x, w, bias)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every kernel (the correctness contract).
+
+Includes the paper-faithful int8 datapath variants:
+* int8 inputs with int32 accumulation (production),
+* ``wrap8``: 8-bit wrap-around psum accumulation, bit-matching the Fig.6
+  simulation waveform (psums stored in 8-bit BRAM slots).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, bias=None, *, accum_dtype=jnp.float32):
+    """VALID, stride-1 convolution.  x: [N,H,W,C]; w: [KH,KW,C,K] → [N,OH,OW,K].
+
+    The paper's Eq. (2): F(i,j) = Σ_d Σ_m Σ_n I(i+m, j+n, d) · K(m,n,d)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(accum_dtype), w.astype(accum_dtype),
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=accum_dtype)
+    if bias is not None:
+        out = out + bias.astype(accum_dtype)
+    return out
+
+
+def conv2d_ref_int8(x, w, bias=None):
+    """int8 × int8 → int32 accumulation (production 8-bit datapath)."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        out = out + bias.astype(jnp.int32)
+    return out
+
+
+def conv2d_ref_wrap8(x, w, bias=None):
+    """Paper-waveform mode: every accumulation wraps in 8 bits.
+
+    Because int8 wrap-around addition is associative and the products enter
+    mod-256 arithmetic independently, this equals the int32 result mod 256."""
+    out = conv2d_ref_int8(x, w, bias)
+    return out.astype(jnp.int8)
+
+
+def matmul_ref(x, w, bias=None, *, accum_dtype=jnp.float32):
+    """x: [M,K] @ w: [K,N] + bias."""
+    out = jnp.dot(x.astype(accum_dtype), w.astype(accum_dtype),
+                  preferred_element_type=accum_dtype)
+    if bias is not None:
+        out = out + bias.astype(accum_dtype)
+    return out
+
+
+def matmul_ref_int8(x, w, bias=None):
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    out = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+    if bias is not None:
+        out = out + bias.astype(jnp.int32)
+    return out
+
+
+def conv1d_depthwise_ref(x, w, bias=None):
+    """Causal depthwise temporal conv (RecurrentGemma site).
+    x: [B,S,W]; w: [K,W] → [B,S,W]."""
+    K = w.shape[0]
+    pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(K):
+        out = out + xp[:, j:j + S].astype(jnp.float32) * w[j].astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Mesh shapes:
+
+* single-pod: (data=16, model=16)       — 256 chips (one v5e pod)
+* multi-pod:  (pod=2, data=16, model=16) — 512 chips
+
+The "pod" axis carries data parallelism across pods (gradient reduction
+crosses DCN); "model" carries TP/EP inside a pod.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the dry "
+            "run must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4):
+    """Small mesh for sharding tests (8 host devices)."""
+    n = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:n])

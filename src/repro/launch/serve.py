@@ -1,0 +1,53 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Brings up the batched engine on a (reduced) architecture and serves a
+synthetic request stream; ``--w8`` switches to the paper's 8-bit datapath
+(w8 weights + int8 KV cache — §Perf iteration C)."""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ALIASES, get_config, reduce_config
+from repro.core.quantize import quantize_weights
+from repro.layers.common import materialize
+from repro.models import lm
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-seq", type=int, default=128)
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--w8", action="store_true")
+    args = p.parse_args()
+
+    cfg = reduce_config(get_config(ALIASES.get(args.arch, args.arch)))
+    params = materialize(lm.param_specs(cfg), jax.random.PRNGKey(0))
+    if args.w8:
+        params = quantize_weights(params, lm.param_specs(cfg))
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8",
+                                  kv_cache_scale=0.25)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(4, 16))).astype(np.int32),
+        max_new_tokens=args.max_new) for i in range(args.requests)]
+    engine = ServingEngine(cfg, params, slots=args.slots,
+                           max_seq=args.max_seq)
+    t0 = time.time()
+    done = engine.run(list(reqs))
+    toks = sum(len(r.output) for r in done)
+    print(f"{len(done)} requests, {toks} tokens, {time.time()-t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real pod this runs under the cluster launcher with one process per
+host (jax.distributed.initialize); flags select the assigned architecture,
+the mesh, and the production loop's fault-tolerance knobs.  On CPU it runs
+the reduced config so the full path is exercisable anywhere.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ALIASES, SHAPES, get_config, reduce_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.distributed.sharding import ShardingPlan
+from repro.layers.common import materialize
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import init_state_specs, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--accum", type=int, default=1)
+    p.add_argument("--reduced", action="store_true", default=True,
+                   help="reduced config (full configs need a TPU pod)")
+    p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    p.add_argument("--resume", action="store_true")
+    args = p.parse_args()
+
+    cfg = get_config(ALIASES.get(args.arch, args.arch))
+    if args.reduced:
+        cfg = reduce_config(cfg)
+
+    sspecs = init_state_specs(cfg)
+    state = {
+        "params": materialize(sspecs["params"], jax.random.PRNGKey(0)),
+        "opt": materialize(sspecs["opt"], jax.random.PRNGKey(1)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    pipe = make_pipeline(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                   global_batch=args.batch, seed=0),
+        process_index=jax.process_index(),
+        process_count=jax.process_count())
+    hp = AdamWConfig(peak_lr=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 20, 2))
+    step_fn = jax.jit(make_train_step(cfg, hp, accum_steps=args.accum))
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                      checkpoint_every=max(args.steps // 5, 10)),
+        step_fn, pipe, state)
+    if args.resume and trainer.ckpt.latest_step() is not None:
+        trainer.state, _ = trainer.ckpt.restore(trainer.state)
+        print(f"resumed from step {trainer.ckpt.latest_step()}")
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,339 @@
+"""Self/cross attention: GQA/MQA, RoPE, chunked-flash (O(S·chunk) memory),
+sliding-window, and single-token decode against a KV cache.
+
+Memory design (why chunked): a 32k-token prefill with materialized scores
+would need B·H·S² f32 — hundreds of GB per device.  ``chunked_attention``
+runs a flash-style two-level scan: outer over query chunks, inner over KV
+chunks, with ``lax.cond`` skipping fully-masked (future / out-of-window)
+KV chunks so causal compute is ~half of dense and sliding-window compute is
+O(S·window).
+
+Sharding: q/k/v projections are head-sharded where the head count divides the
+model axis; KV tensors with few heads shard head_dim instead (see DESIGN.md).
+KV is *broadcast* to full heads only in the chunked prefill path (small
+relative cost); decode uses grouped einsums against the un-broadcast cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec, cast, dense, lconstraint
+from repro.layers.norms import rmsnorm_specs
+from repro.layers.rope import apply_rope
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv_heads", "qkv")),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv_heads", "qkv")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed"),
+                        fan_in_axes=(0, 1)),
+    }
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = rmsnorm_specs(dh)
+        specs["k_norm"] = rmsnorm_specs(dh)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention
+# ---------------------------------------------------------------------------
+
+
+def _flash_update(carry, scores, v_j):
+    """One online-softmax update.  scores: [B,H,cq,ck] f32, v_j: [B,ck,H,D]."""
+    m, l, acc = carry
+    m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(scores - m_new[..., None])
+    l_new = alpha * l + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhqk,bkhd->bhqd", p, cast(v_j, jnp.float32))
+    acc_new = alpha[..., None] * acc + pv
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      chunk: int = 512, q_offset: int = 0,
+                      softcap: float = 0.0):
+    """q: [B,Sq,H,D]; k/v: [B,Sk,H,D] (already broadcast to H heads).
+
+    Returns [B,Sq,H,D].  ``window`` > 0 restricts each query to the last
+    ``window`` keys (inclusive of itself).  ``q_offset`` is the absolute
+    position of q[0] relative to k[0] (cross/cache cases).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    c = min(chunk, Sq, Sk)
+    while Sq % c or Sk % c:            # shapes in this repo are powers of two
+        c //= 2
+    assert c >= 1
+    nq, nk = Sq // c, Sk // c
+    scale = 1.0 / math.sqrt(D)
+
+    qc = q.reshape(B, nq, c, H, D)
+    kc = k.reshape(B, nk, c, H, D)
+    vc = v.reshape(B, nk, c, H, D)
+
+    def q_step(_, i):
+        q_i = cast(qc[:, i], jnp.float32) * scale          # [B,c,H,D]
+        qpos = q_offset + i * c + jnp.arange(c)
+
+        def kv_step(carry, j):
+            # lax.cond skips fully-masked chunks at *runtime*: causal compute
+            # is ~S²/2 and sliding-window compute is O(S·window).
+            kpos = j * c + jnp.arange(c)
+            pred_causal = jnp.logical_or(
+                jnp.asarray(not causal), kpos[0] <= qpos[-1])
+            pred_window = (kpos[-1] >= qpos[0] - (window - 1)
+                           if window > 0 else jnp.asarray(True))
+            pred = jnp.logical_and(pred_causal, pred_window)
+
+            def compute(carry):
+                k_j, v_j = kc[:, j], vc[:, j]
+                scores = jnp.einsum("bqhd,bkhd->bhqk", q_i,
+                                    cast(k_j, jnp.float32))
+                if softcap:
+                    scores = softcap * jnp.tanh(scores / softcap)
+                mask = jnp.ones((c, c), bool)
+                if causal:
+                    mask &= qpos[:, None] >= kpos[None, :]
+                if window > 0:
+                    mask &= kpos[None, :] > qpos[:, None] - window
+                scores = jnp.where(mask, scores, NEG_INF)
+                return _flash_update(carry, scores, v_j)
+
+            new = jax.lax.cond(pred, compute, lambda cry: cry, carry)
+            return new, None
+
+        init = (jnp.full((B, H, c), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, c), jnp.float32),
+                jnp.zeros((B, H, c, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]       # [B,H,c,D]
+        return None, out_i.transpose(0, 2, 1, 3)             # [B,c,H,D]
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))     # [nq,B,c,H,D]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+    return cast(out, q.dtype)
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0, softcap: float = 0.0):
+    """Materialized-scores oracle (tests / tiny shapes only)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", cast(q, jnp.float32) * scale,
+                        cast(k, jnp.float32))
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, cast(v, jnp.float32))
+    return cast(out, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache for one attention layer.  For sliding-window blocks
+    the cache is a ring buffer of size ``window`` (sub-quadratic memory —
+    this is what makes recurrentgemma long_500k feasible)."""
+    k: jax.Array          # [B, S_cache, KV, D]
+    v: jax.Array          # [B, S_cache, KV, D]
+
+    @staticmethod
+    def init_specs(cfg, batch: int, seq_len: int, window: int = 0):
+        size = min(seq_len, window) if window > 0 else seq_len
+        shp = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+        axes = ("batch", "cache_seq", "kv_heads", "qkv")
+        dt = cfg.resolved_kv_dtype
+        return KVCache(
+            k=ParamSpec(shp, axes, dtype=dt, init="zeros"),
+            v=ParamSpec(shp, axes, dtype=dt, init="zeros"),
+        )
+
+
+def _project_qkv(params, x, cfg, positions):
+    b = cfg.gemm_backend
+    q = dense(params["wq"], x, "bsd,dhe->bshe", backend="xla",
+              compute_dtype=cfg.compute_dtype)
+    k = dense(params["wk"], x, "bsd,dke->bske", backend="xla",
+              compute_dtype=cfg.compute_dtype)
+    v = dense(params["wv"], x, "bsd,dke->bske", backend="xla",
+              compute_dtype=cfg.compute_dtype)
+    q = lconstraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = lconstraint(k, ("batch", "seq", "kv_heads", "qkv"))
+    v = lconstraint(v, ("batch", "seq", "kv_heads", "qkv"))
+    if cfg.qk_norm:
+        from repro.layers.norms import apply_norm
+        q = apply_norm(params["q_norm"], q, cfg)
+        k = apply_norm(params["k_norm"], k, cfg)
+    if cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _broadcast_kv(t, num_heads):
+    """[B,S,KV,D] → [B,S,H,D] by repeating each KV head H/KV times."""
+    B, S, KV, D = t.shape
+    g = num_heads // KV
+    t = jnp.broadcast_to(t[:, :, :, None, :], (B, S, KV, g, D))
+    t = t.reshape(B, S, KV * g, D)
+    return lconstraint(t, ("batch", "seq", "heads", "head_dim"))
+
+
+def attention_layer(params, x, cfg, *, positions, causal=True, window=0,
+                    kv=None):
+    """Full attention over a sequence (train / prefill / encoder).
+
+    kv: optional (k_src, v_src) for cross attention (already projected
+    source sequence is NOT expected here; pass source hidden states).
+    Returns (out, (k, v)) — projected k/v for cache priming.
+    """
+    if kv is None:
+        q, k, v = _project_qkv(params, x, cfg, positions)
+        q_offset = 0
+    else:
+        q = dense(params["wq"], x, "bsd,dhe->bshe",
+                  compute_dtype=cfg.compute_dtype)
+        if cfg.use_rope and positions is not None:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        src = kv
+        k = dense(params["wk"], src, "bsd,dke->bske",
+                  compute_dtype=cfg.compute_dtype)
+        v = dense(params["wv"], src, "bsd,dke->bske",
+                  compute_dtype=cfg.compute_dtype)
+        q_offset = 0
+        causal = False
+
+    kf = _broadcast_kv(k, cfg.num_heads)
+    vf = _broadcast_kv(v, cfg.num_heads)
+    if cfg.attn_impl == "dense":
+        out = dense_attention(q, kf, vf, causal=causal, window=window,
+                              q_offset=q_offset)
+    elif cfg.attn_impl == "flash" and window == 0 and q_offset == 0:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, kf, vf, causal=causal,
+                                   block_q=cfg.attn_chunk,
+                                   block_k=cfg.attn_chunk)
+    else:
+        out = chunked_attention(q, kf, vf, causal=causal, window=window,
+                                chunk=cfg.attn_chunk, q_offset=q_offset)
+    out = lconstraint(out, ("batch", "seq", "heads", "head_dim"))
+    y = dense(params["wo"], out, "bshe,hed->bsd",
+              compute_dtype=cfg.compute_dtype)
+    return lconstraint(y, ("batch", "seq_r", "embed")), (k, v)
+
+
+def decode_attention_layer(params, x, cfg, *, cache: KVCache, pos,
+                           window=0, cross_kv=None):
+    """One-token decode.  x: [B,1,D]; pos: [B] absolute positions.
+
+    Grouped-einsum attention against the (possibly ring-buffered) cache —
+    the KV tensors are never broadcast to full heads, so per-step HBM
+    traffic is exactly one cache read (the decode roofline term).
+    Returns (out [B,1,D], new_cache).
+    """
+    B = x.shape[0]
+    KV, D = cfg.num_kv_heads, cfg.head_dim
+    G = cfg.num_heads // KV
+
+    if cross_kv is not None:
+        q = dense(params["wq"], x, "bsd,dhe->bshe",
+                  compute_dtype=cfg.compute_dtype)
+        if cfg.use_rope:
+            q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_all, v_all = cross_kv                    # precomputed, static
+        qg = q.reshape(B, KV, G, D)
+        scores = jnp.einsum("bkgd,bskd->bkgs", cast(qg, jnp.float32),
+                            cast(k_all, jnp.float32)) / math.sqrt(D)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", p, cast(v_all, jnp.float32))
+        out = cast(out, cfg.compute_dtype).reshape(B, 1, cfg.num_heads, D)
+        y = dense(params["wo"], out, "bshe,hed->bsd",
+                  compute_dtype=cfg.compute_dtype)
+        return y, cache
+
+    q, k_new, v_new = _project_qkv(params, x, cfg, pos[:, None])
+    S_cache = cache.k.shape[1]
+    int8_cache = cache.k.dtype == jnp.int8
+    kv_scale = cfg.kv_cache_scale
+
+    def to_cache(t):
+        if int8_cache:
+            return jnp.clip(jnp.round(t.astype(jnp.float32) / kv_scale),
+                            -128, 127).astype(jnp.int8)
+        return cast(t, cache.k.dtype)
+
+    # ring-buffer slot (== pos when the cache is not a ring)
+    slot = pos % S_cache                                          # [B]
+    bidx = jnp.arange(B)
+    k_cache = cache.k.at[bidx, slot].set(to_cache(k_new[:, 0]))
+    v_cache = cache.v.at[bidx, slot].set(to_cache(v_new[:, 0]))
+    k_cache = lconstraint(k_cache, ("batch", "cache_seq", "kv_heads", "qkv"))
+    v_cache = lconstraint(v_cache, ("batch", "cache_seq", "kv_heads", "qkv"))
+
+    qg = q.reshape(B, KV, G, D)
+    if int8_cache:
+        # paper 8-bit datapath on the cache read: quantize q per-tensor and
+        # contract in s8 with int32 accumulation (§Perf C2)
+        qf = qg.astype(jnp.float32)
+        sq = jnp.maximum(jnp.max(jnp.abs(qf)), 1e-12) / 127.0
+        qq = jnp.clip(jnp.round(qf / sq), -128, 127).astype(jnp.int8)
+        acc = jnp.einsum("bkgd,bskd->bkgs", qq, k_cache,
+                         preferred_element_type=jnp.int32)
+        scores = acc.astype(jnp.float32) * (sq * kv_scale) / math.sqrt(D)
+    else:
+        scores = jnp.einsum("bkgd,bskd->bkgs", cast(qg, jnp.float32),
+                            cast(k_cache, jnp.float32)) / math.sqrt(D)
+    # validity: a slot s holds absolute position p(s); valid if p(s) <= pos
+    # and (window) p(s) > pos - window.  For a ring of size S_cache filled
+    # past capacity every slot is valid.
+    slots = jnp.arange(S_cache)
+    # absolute position currently stored in each slot
+    wraps = (pos[:, None] - slots[None, :] + S_cache) // S_cache
+    abs_pos = pos[:, None] - ((pos[:, None] - slots[None, :]) % S_cache)
+    valid = (abs_pos >= 0) & (abs_pos <= pos[:, None])
+    if window > 0:
+        valid &= abs_pos > pos[:, None] - window
+    del wraps
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    if int8_cache:
+        # probabilities ∈ [0,1]: quantize p at 1/127 resolution, s8 dot
+        pq = jnp.clip(jnp.round(p * 127.0), 0, 127).astype(jnp.int8)
+        acc = jnp.einsum("bkgs,bskd->bkgd", pq, v_cache,
+                         preferred_element_type=jnp.int32)
+        out = acc.astype(jnp.float32) * (kv_scale / 127.0)
+    else:
+        out = jnp.einsum("bkgs,bskd->bkgd", p, cast(v_cache, jnp.float32))
+    out = cast(out, cfg.compute_dtype).reshape(B, 1, cfg.num_heads, D)
+    y = dense(params["wo"], out, "bshe,hed->bsd",
+              compute_dtype=cfg.compute_dtype)
+    return y, KVCache(k=k_cache, v=v_cache)

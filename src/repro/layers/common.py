@@ -1,0 +1,214 @@
+"""Parameter-spec machinery shared by all layers.
+
+A model is described once as a pytree of :class:`ParamSpec`.  From that single
+source of truth we derive
+
+* materialized parameters  (``materialize`` — smoke tests / real training),
+* ``jax.ShapeDtypeStruct`` stand-ins  (``shape_structs`` — the dry run),
+* ``NamedSharding``s via logical-axis rules (``repro.distributed.sharding``).
+
+Logical axis names used throughout (mapped to mesh axes by the sharding
+rules):
+
+``embed``      residual stream width            (FSDP-shardable)
+``heads``      query heads                      → model
+``kv_heads``   kv heads (may be < model axis)   → replicated
+``qkv``        head_dim of kv projections       → model (see DESIGN.md)
+``mlp``        feed-forward hidden              → model
+``vocab``      vocabulary                       → model
+``experts``    MoE expert dimension             → model (EP)
+``rnn``        RG-LRU / conv1d channel width    → model
+``stack``      scanned layer-group dimension    → never sharded
+``null``       never sharded
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "float32"
+    init: str = "fan_in"        # fan_in | normal | zeros | ones | constant
+    scale: float = 1.0
+    fan_in_axes: Tuple[int, ...] = (0,)   # which dims form fan-in for scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn: Callable[[ParamSpec], Any], tree: PyTree) -> PyTree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def shape_structs(tree: PyTree, dtype_override: Optional[str] = None) -> PyTree:
+    """ShapeDtypeStruct stand-ins (no allocation) — dry-run inputs."""
+    def f(s: ParamSpec):
+        dt = dtype_override or s.dtype
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(dt))
+    return spec_map(f, tree)
+
+
+def axes_tree(tree: PyTree) -> PyTree:
+    return spec_map(lambda s: s.axes, tree)
+
+
+def materialize(tree: PyTree, key: jax.Array,
+                dtype_override: Optional[str] = None) -> PyTree:
+    """Materialize real parameters (smoke tests / examples / training)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(s: ParamSpec, k):
+        dt = jnp.dtype(dtype_override or s.dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        if s.init == "constant":
+            return jnp.full(s.shape, s.scale, dt)
+        if s.init == "normal":
+            return (jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(dt)
+        if s.init == "fan_in":
+            fan = max(int(np.prod([s.shape[a] for a in s.fan_in_axes])), 1)
+            std = s.scale / math.sqrt(fan)
+            return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dt)
+        raise ValueError(s.init)
+
+    return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def param_count_tree(tree: PyTree) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+def stack_specs(tree: PyTree, n: int) -> PyTree:
+    """Prepend a scanned ``stack`` dimension of size n to every spec."""
+    def f(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("stack",) + s.axes, s.dtype,
+                         s.init, s.scale,
+                         tuple(a + 1 for a in s.fan_in_axes))
+    return spec_map(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding constraints (no-op outside an active rule context)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: Optional[dict] = None
+
+
+class activate_rules:
+    """Context manager installing logical-axis → mesh-axis rules; while
+    active, :func:`lconstraint` emits with_sharding_constraint."""
+
+    def __init__(self, rules: Optional[dict]):
+        self.rules = rules
+
+    def __enter__(self):
+        global _ACTIVE_RULES
+        self._prev = _ACTIVE_RULES
+        _ACTIVE_RULES = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_RULES
+        _ACTIVE_RULES = self._prev
+        return False
+
+
+def resolve_pspec(axes: Tuple[Optional[str], ...], rules: dict):
+    """Logical axes → PartitionSpec with first-come-first-served mesh-axis
+    conflict resolution (a mesh axis may shard at most one dimension)."""
+    from jax.sharding import PartitionSpec as P
+    used: set = set()
+    out = []
+    for name in axes:
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None:
+            out.append(None)
+            continue
+        flat = (mesh_axis,) if isinstance(mesh_axis, str) else tuple(mesh_axis)
+        if not flat or any(a in used for a in flat):
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(mesh_axis if isinstance(mesh_axis, str) else tuple(flat))
+    return P(*out)
+
+
+def lconstraint(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op when no
+    rules are active, e.g. in single-device smoke tests)."""
+    if _ACTIVE_RULES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolve_pspec(axes, _ACTIVE_RULES))
+
+
+def cast(x, dtype):
+    dt = jnp.dtype(dtype)
+    return x.astype(dt) if x.dtype != dt else x
+
+
+# ---------------------------------------------------------------------------
+# GEMM backend dispatch: "xla" einsum vs the paper-dataflow Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def dense(w: jax.Array, x: jax.Array, subscripts: str, *,
+          backend: str = "xla", bias: Optional[jax.Array] = None,
+          compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Linear layer core.  ``subscripts`` is the einsum string x,w->y.
+
+    backend "pallas_ws" routes 2-D GEMMs through the weight-stationary
+    kernel implementing the paper's dataflow (see repro.kernels.matmul_ws);
+    everything else (and all CPU dry-run paths) uses XLA einsum.
+
+    w8a8 serving: a dict weight {"q": int8, "s": scale} runs the paper's
+    8-bit datapath (true s8 dot — §Perf iteration C1)."""
+    if isinstance(w, dict) and "q" in w:
+        from repro.core.quantize import w8_einsum
+        y = w8_einsum(subscripts, x, w["q"], w["s"],
+                      compute_dtype=compute_dtype)
+        if bias is not None:
+            y = y + bias
+        return y
+    x = cast(x, compute_dtype)
+    w = cast(w, compute_dtype)
+    if backend == "pallas_ws" and w.ndim == 2:
+        from repro.kernels import ops as kops
+        lead = x.shape[:-1]
+        y = kops.matmul_ws(x.reshape(-1, x.shape[-1]), w, bias=bias)
+        return y.reshape(*lead, w.shape[-1])
+    # preferred_element_type pins the dot output to the compute dtype, so
+    # model-parallel partial sums are all-reduced in bf16, not the f32
+    # accumulator dtype — halves TP collective wire (EXPERIMENTS.md §Perf,
+    # iteration A1).  JAX propagates this to the AD transpose dots, so
+    # weight-gradient reductions get the same halving.
+    y = jnp.einsum(subscripts, x, w,
+                   preferred_element_type=jnp.dtype(compute_dtype))
+    if bias is not None:
+        y = y + bias
+    return y

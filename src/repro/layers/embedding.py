@@ -1,0 +1,47 @@
+"""Token embeddings / unembedding (tied optional)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec, cast, lconstraint
+
+
+def embedding_specs(cfg):
+    specs = {"embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                ("vocab", "embed"), init="normal", scale=0.02)}
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"), init="fan_in")
+    return specs
+
+
+def embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = cast(x, cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return lconstraint(x, ("batch", "seq_r", "embed"))
+
+
+def logits(params, x, cfg):
+    """Final projection; always f32 for a stable softmax/loss."""
+    x = cast(x, cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = cast(params["embed"], cfg.compute_dtype)
+        out = jnp.einsum("bsd,vd->bsv", x, w,
+                         preferred_element_type=jnp.float32)
+    elif isinstance(params["unembed"], dict):   # w8 serving
+        from repro.core.quantize import w8_einsum
+        out = w8_einsum("bsd,dv->bsv", x, params["unembed"]["q"],
+                        params["unembed"]["s"], compute_dtype=jnp.float32)
+    else:
+        w = cast(params["unembed"], cfg.compute_dtype)
+        out = jnp.einsum("bsd,dv->bsv", x, w,
+                         preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        out = c * jnp.tanh(out / c)
+    return lconstraint(out, ("batch", "seq", "vocab"))

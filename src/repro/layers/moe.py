@@ -1,0 +1,139 @@
+"""Mixture-of-Experts feed-forward (GShard-style capacity, scatter dispatch).
+
+Dataflow (expert-parallel friendly — see DESIGN.md §Distribution):
+
+1. router logits → top-k experts per token (f32 softmax),
+2. position-in-expert via a per-*group* cumulative count (groups = batch
+   rows by default, so the cumsum never crosses a data shard),
+3. scatter tokens into a capacity-bounded buffer [groups, E, C, D]
+   (overflow tokens are dropped — capacity_factor bounds the blow-up),
+4. per-expert GEMMs: einsum over the E-sharded buffer — compute is local
+   to the expert's device(s) (this is EP),
+5. gather back + combine weighted by gate probabilities.
+
+The buffer einsums carry ~top_k·capacity_factor× the token activations —
+the inherent cost of top-k routing, equal to what an all-to-all dispatch
+would move.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec, cast, dense, lconstraint
+from repro.layers.mlp import mlp_specs, apply_mlp, _act
+
+
+def moe_specs(cfg):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_ff, m.num_experts
+    specs = {
+        "router": ParamSpec((d, e), ("embed", "experts"), init="fan_in"),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp"),
+                             fan_in_axes=(1,)),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "mlp"),
+                           fan_in_axes=(1,)),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed"),
+                        fan_in_axes=(1,)),
+    }
+    if m.num_shared:
+        # DeepSeekMoE: shared experts form one dense gated MLP
+        specs["shared"] = mlp_specs(cfg, d_ff=m.num_shared * f)
+    return specs
+
+
+def _capacity(tokens_per_group: int, m) -> int:
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 for clean tiling
+
+
+def apply_moe(params, x, cfg, *, train: bool = False,
+              rng=None) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] → (out [B, S, D], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    G = m.num_groups or B
+    Tg = (B * S) // G
+    E, K = m.num_experts, m.top_k
+    C = _capacity(Tg, m)
+
+    xg = x.reshape(G, Tg, D)
+    xg = lconstraint(xg, ("batch", None, "embed"))
+
+    # ---- router (f32 for a stable softmax) -----------------------------
+    logits = jnp.einsum("gtd,de->gte", cast(xg, jnp.float32),
+                        cast(params["router"], jnp.float32))
+    if train and m.router_jitter and rng is not None:
+        logits += m.router_jitter * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)                    # [G,Tg,E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # [G,Tg,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)           # renormalize
+
+    # ---- load-balancing auxiliary loss (Switch/GShard form) ------------
+    me = jnp.mean(probs, axis=1)                               # [G,E]
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E * m.aux_loss_weight
+
+    # ---- position-in-expert --------------------------------------------
+    flat_idx = gate_idx.reshape(G, Tg * K)                     # [G,TK]
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)      # [G,TK,E]
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot              # count before me
+    pos = jnp.take_along_axis(
+        pos_all, flat_idx[..., None], axis=-1)[..., 0]         # [G,TK]
+    keep = pos < C
+    slot = flat_idx * C + jnp.where(keep, pos, 0)              # [G,TK]
+
+    # ---- dispatch --------------------------------------------------------
+    # Only a small int32 index map is ever *scattered*; the activations move
+    # through gathers along G-sharded axes (local per data shard) and one
+    # contiguous buffer reshard G↔E (the EP all-to-all).  Scattering the
+    # [G,TK,D] activations directly makes GSPMD replicate+all-reduce the
+    # 10+ GB buffer every layer (§Perf iteration 1).
+    TK = Tg * K
+    gidx = jnp.broadcast_to(jnp.arange(G)[:, None], slot.shape)
+    sentinel = TK                                  # → pad row (zeros)
+    rows = jnp.where(keep, jnp.arange(TK)[None, :], sentinel)
+    slot_to_row = jnp.full((G, E * C), sentinel, jnp.int32)
+    slot_to_row = slot_to_row.at[gidx, slot].min(rows, mode="drop")
+    token_of_slot = jnp.where(slot_to_row < sentinel,
+                              slot_to_row // K, Tg)            # [G,EC]
+    xpad = jnp.concatenate(
+        [cast(xg, cfg.compute_dtype),
+         jnp.zeros((G, 1, D), jnp.dtype(cfg.compute_dtype))], axis=1)
+    buf = jnp.take_along_axis(xpad, token_of_slot[..., None], axis=1)
+    buf = lconstraint(buf, ("batch", None, "embed"))           # G-local gather
+    buf = buf.reshape(G, E, C, D)
+    buf = lconstraint(buf, ("batch", "experts", None, "embed"))  # EP reshard
+
+    # ---- expert GEMMs (E-sharded: expert parallel) ----------------------
+    wg = cast(params["wi_gate"], cfg.compute_dtype)
+    wu = cast(params["wi_up"], cfg.compute_dtype)
+    wo = cast(params["wo"], cfg.compute_dtype)
+    h = _act(cfg.mlp_act)(jnp.einsum("gecd,edf->gecf", buf, wg))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, wu)
+    h = lconstraint(h, ("batch", "experts", None, "mlp"))
+    yb = jnp.einsum("gecf,efd->gecd", h, wo)                   # [G,E,C,D]
+    yb = lconstraint(yb, ("batch", "experts", None, "embed"))
+
+    # ---- combine: gather back + gate-weighted sum over K ----------------
+    # Reshard the expert outputs from E-sharded (EP) back to group-sharded
+    # BEFORE the gather: one explicit all-to-all-sized move instead of the
+    # replicate-the-buffer fallback GSPMD picks for a gather from a sharded
+    # axis (§Perf iteration 1 — 394s → see EXPERIMENTS.md).
+    yfl = lconstraint(yb.reshape(G, E * C, D), ("batch", None, "embed"))
+    got = jnp.take_along_axis(yfl, slot[..., None], axis=1)    # [G,TK,D]
+    got = jnp.where(keep[..., None], got, 0)
+    got = got.reshape(G, Tg, K, D)
+    y = jnp.einsum("gtkd,gtk->gtd", cast(got, jnp.float32),
+                   cast(gate_vals, jnp.float32))
+    y = cast(y, cfg.compute_dtype).reshape(B, S, D)
+
+    # ---- shared experts (always-on) --------------------------------------
+    if m.num_shared:
+        y = y + apply_mlp(params["shared"], x, cfg)
+    return lconstraint(y, ("batch", "seq_r", "embed")), aux

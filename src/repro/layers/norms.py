@@ -1,0 +1,53 @@
+"""RMSNorm / LayerNorm, computed in f32 and cast back."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec
+
+
+def rmsnorm_specs(d: int, unit_offset: bool = False):
+    init = "zeros" if unit_offset else "ones"
+    return {"scale": ParamSpec((d,), ("embed",), init=init)}
+
+
+def layernorm_specs(d: int):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def norm_specs(cfg, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return rmsnorm_specs(d, cfg.rmsnorm_unit_offset)
+    return layernorm_specs(d)
+
+
+def apply_norm(params, x, cfg, eps: float = 1e-6):
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + eps)
+        scale = params["scale"].astype(jnp.float32)
+        if cfg.rmsnorm_unit_offset:
+            scale = 1.0 + scale
+        return (x * scale).astype(orig)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(orig)
+
+
+def groupnorm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head group norm (RWKV6 wkv output).  x: [..., H, N]."""
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    out = x * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(orig)

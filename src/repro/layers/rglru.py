@@ -1,0 +1,134 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv1d (width 4) +
+RG-LRU gated linear recurrence.
+
+The temporal conv1d is this repo's *in-model* convolution site: it runs
+through the paper's ConvCore dataflow on the TPU target
+(``cfg.gemm_backend == "pallas_ws"`` routes it to the depthwise conv1d
+kernel); the default path is the shift-based jnp form (dry-run / CPU).
+
+Train/prefill uses ``lax.associative_scan`` (log-depth, avoids the O(S)
+sequential chain); decode keeps an O(1) recurrent state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec, cast, dense, lconstraint
+
+_C = 8.0  # RG-LRU sharpness constant (Griffin §2.4)
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array    # [B, conv_width-1, W] — last inputs for the conv1d
+    h: jax.Array       # [B, W] — recurrence carry
+
+    @staticmethod
+    def init_specs(cfg, batch: int):
+        w = cfg.rnn_width
+        return RGLRUState(
+            conv=ParamSpec((batch, cfg.conv1d_width - 1, w),
+                           ("batch", None, "rnn"),
+                           dtype=cfg.compute_dtype, init="zeros"),
+            h=ParamSpec((batch, w), ("batch", "rnn"),
+                        dtype="float32", init="zeros"),
+        )
+
+
+def rglru_specs(cfg):
+    d, w = cfg.d_model, cfg.rnn_width
+    return {
+        "w_gate": ParamSpec((d, w), ("embed", "rnn")),
+        "w_rnn_in": ParamSpec((d, w), ("embed", "rnn")),
+        "conv_w": ParamSpec((cfg.conv1d_width, w), (None, "rnn"),
+                            init="fan_in", fan_in_axes=(0,)),
+        "conv_b": ParamSpec((w,), ("rnn",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("rnn", "rnn")),       # recurrence gate
+        "b_a": ParamSpec((w,), ("rnn",), init="zeros"),
+        "w_x": ParamSpec((w, w), ("rnn", "rnn")),       # input gate
+        "b_x": ParamSpec((w,), ("rnn",), init="zeros"),
+        "lam": ParamSpec((w,), ("rnn",), init="constant", scale=0.7),
+        "w_out": ParamSpec((w, d), ("rnn", "embed")),
+    }
+
+
+def causal_conv1d(u, conv_w, conv_b, prefix=None):
+    """Depthwise causal temporal conv.  u: [B,S,W]; conv_w: [K,W].
+
+    prefix: [B,K-1,W] carried state (decode / chunked prefill); zeros
+    otherwise.  TPU target: this maps onto the ConvCore weight-stationary
+    dataflow (kernels/conv1d section of DESIGN.md)."""
+    K = conv_w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    xp = jnp.concatenate([cast(prefix, u.dtype), u], axis=1)   # [B,S+K-1,W]
+    S = u.shape[1]
+    y = conv_b.astype(u.dtype)[None, None]
+    for j in range(K):   # K is 4: unrolled shifted MACs == the 9-MAC analogue
+        y = y + xp[:, j:j + S] * conv_w[j][None, None]
+    return y
+
+
+def _gates(params, u):
+    """RG-LRU gate computation in f32.  u: [B,S,W] → (log_a, b_input)."""
+    uf = cast(u, jnp.float32)
+    r = jax.nn.sigmoid(uf @ cast(params["w_a"], jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ cast(params["w_x"], jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    gated = i * uf
+    # multiplier sqrt(1 - a^2) = sqrt(1 - exp(2 log_a)), computed stably
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return log_a, mult * gated
+
+
+def rglru_scan(params, u, h0=None):
+    """Associative linear recurrence h_t = a_t h_{t-1} + b_t over axis 1."""
+    log_a, b = _gates(params, u)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h  # f32 [B,S,W]
+
+
+def apply_rglru(params, x, cfg, state: RGLRUState | None = None):
+    """Full recurrent block.  x: [B,S,D] → (y, new_state or None)."""
+    gate = jax.nn.gelu(dense(params["w_gate"], x, "bsd,dw->bsw",
+                             compute_dtype=cfg.compute_dtype))
+    u_raw = dense(params["w_rnn_in"], x, "bsd,dw->bsw",
+                  compute_dtype=cfg.compute_dtype)
+    u_raw = lconstraint(u_raw, ("batch", "seq", "rnn"))
+    prefix = state.conv if state is not None else None
+    u = causal_conv1d(u_raw, cast(params["conv_w"], u_raw.dtype),
+                      params["conv_b"], prefix=prefix)
+    h0 = state.h if state is not None else None
+    h = rglru_scan(params, u, h0=h0)
+    y = cast(h, cfg.compute_dtype) * gate
+    y = dense(params["w_out"], y, "bsw,wd->bsd",
+              compute_dtype=cfg.compute_dtype)
+    y = lconstraint(y, ("batch", "seq_r", "embed"))
+    if state is None:
+        return y, None
+    K = cfg.conv1d_width
+    # carry the last K-1 conv inputs and the last recurrence state
+    xp = jnp.concatenate([cast(state.conv, u_raw.dtype), u_raw], axis=1)
+    new_state = RGLRUState(conv=xp[:, -(K - 1):], h=h[:, -1])
+    return y, new_state
+
+
+def decode_rglru(params, x, cfg, state: RGLRUState):
+    """Single-token step.  x: [B,1,D]."""
+    y, new_state = apply_rglru(params, x, cfg, state=state)
+    return y, new_state

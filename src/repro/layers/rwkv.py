@@ -1,0 +1,230 @@
+"""RWKV-6 ("Finch") — attention-free time-mix with data-dependent per-channel
+decay, plus the RWKV channel-mix FFN.
+
+Two execution forms, validated against each other in tests:
+
+* ``wkv6_recurrent`` — the O(S) sequential oracle / decode step
+  (state [B,H,N,N]).
+* ``wkv6_chunked``  — chunk-parallel form used for train/prefill.  All decay
+  exponentials appear as exp(logP_i - logP_j) with i ≥ j, which is always
+  ≤ 0 because log-decays are negative — numerically exact, no clamping.
+  Per-chunk intra work is an [L,L]-pairwise per-channel contraction
+  (the linear-attention analogue of a flash block).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec, cast, dense, lconstraint
+from repro.layers.norms import groupnorm_heads
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+class RWKVState(NamedTuple):
+    S: jax.Array        # [B, H, N, N] wkv state (f32)
+    x_att: jax.Array    # [B, D] last input to time-mix (token shift)
+    x_ffn: jax.Array    # [B, D] last input to channel-mix
+
+    @staticmethod
+    def init_specs(cfg, batch: int):
+        H = cfg.d_model // cfg.rwkv_head_size
+        N = cfg.rwkv_head_size
+        return RWKVState(
+            S=ParamSpec((batch, H, N, N), ("batch", "heads", None, None),
+                        dtype="float32", init="zeros"),
+            x_att=ParamSpec((batch, cfg.d_model), ("batch", "embed"),
+                            dtype=cfg.compute_dtype, init="zeros"),
+            x_ffn=ParamSpec((batch, cfg.d_model), ("batch", "embed"),
+                            dtype=cfg.compute_dtype, init="zeros"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def timemix_specs(cfg):
+    d = cfg.d_model
+    r = cfg.rwkv_lora_rank
+    H = d // cfg.rwkv_head_size
+    N = cfg.rwkv_head_size
+    return {
+        "mu_base": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu": ParamSpec((5, d), (None, "embed"), init="zeros"),
+        "ddlerp_a": ParamSpec((d, 5, r), ("embed", None, None), init="fan_in"),
+        "ddlerp_b": ParamSpec((5, r, d), (None, None, "embed"), init="zeros"),
+        "w0": ParamSpec((d,), ("embed",), init="constant", scale=-2.0),
+        "w_lora_a": ParamSpec((d, r), ("embed", None), init="fan_in"),
+        "w_lora_b": ParamSpec((r, d), (None, "embed"), init="zeros"),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+        "u": ParamSpec((H, N), ("heads", None), init="normal", scale=0.5),
+        "gn_scale": ParamSpec((H, N), ("heads", None), init="ones"),
+        "gn_bias": ParamSpec((H, N), ("heads", None), init="zeros"),
+    }
+
+
+def channelmix_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv6 cores
+# ---------------------------------------------------------------------------
+
+
+def wkv6_recurrent(r, k, v, logw, u, S0=None):
+    """Sequential oracle.  r,k,v,logw: [B,S,H,N] f32; u: [H,N].
+    Returns (o [B,S,H,N], S_final [B,H,N,N])."""
+    B, S, H, N = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(Sc, inp):
+        rt, kt, vt, lwt = inp                    # [B,H,N]
+        bonus = jnp.einsum("bhn,bhn->bh", rt, u[None] * kt)
+        o = jnp.einsum("bhn,bhnm->bhm", rt, Sc) + bonus[..., None] * vt
+        Sn = jnp.exp(lwt)[..., None] * Sc + kt[..., None] * vt[..., None, :]
+        return Sn, o
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, logw))
+    S_fin, o = jax.lax.scan(step, S0, xs)
+    return o.transpose(1, 0, 2, 3), S_fin
+
+
+def wkv6_chunked(r, k, v, logw, u, S0=None, chunk: int = 32):
+    """Chunk-parallel wkv6 (see module docstring).  Same signature/returns
+    as :func:`wkv6_recurrent`."""
+    B, S, H, N = r.shape
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    if S0 is None:
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def reshape(t):
+        return t.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, lws = map(reshape, (r, k, v, logw))     # [nc,B,L,H,N]
+    tri_strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+
+    def chunk_step(Sc, inp):
+        rc, kc, vc, lwc = inp                           # [B,L,H,N]
+        lp = jnp.cumsum(lwc, axis=1)                    # inclusive logP_i
+        lp_prev = lp - lwc                              # exclusive logP_{i-1}
+        lp_last = lp[:, -1]                             # [B,H,N]
+        # intra-chunk pairwise decays: D[b,i,j,h,n] = exp(lp_prev_i - lp_j),
+        # exponent <= 0 for j <= i-1 (cumsum of negatives) — always finite.
+        expo = lp_prev[:, :, None] - lp[:, None]        # [B,L,L,H,N]
+        D = jnp.exp(jnp.where(tri_strict[None, :, :, None, None], expo, -jnp.inf))
+        A = jnp.einsum("blhn,bmhn,blmhn->bhlm", rc, kc, D)
+        bonus = jnp.einsum("blhn,blhn->blh", rc, u[None, None] * kc)
+        o_intra = jnp.einsum("bhlm,bmhn->blhn", A, vc)
+        o_intra += bonus[..., None] * vc
+        o_inter = jnp.einsum("blhn,bhnm->blhm", rc * jnp.exp(lp_prev), Sc)
+        # state to end of chunk: decay S0 fully; each k_j decayed to chunk end
+        k_dec = kc * jnp.exp(lp_last[:, None] - lp)
+        Sn = (jnp.exp(lp_last)[..., None] * Sc
+              + jnp.einsum("blhn,blhm->bhnm", k_dec, vc))
+        return Sn, o_intra + o_inter
+
+    S_fin, o = jax.lax.scan(chunk_step, S0, (rs, ks, vs, lws))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    return o, S_fin
+
+
+# ---------------------------------------------------------------------------
+# Layer assembly
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, x_prev_last=None):
+    """x_{t-1} with zero (or carried) state at t=0.  x: [B,S,D]."""
+    if x_prev_last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = cast(x_prev_last[:, None], x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def apply_timemix(params, x, cfg, state: RWKVState | None = None,
+                  chunked: bool = True):
+    """RWKV6 time mix.  x: [B,S,D] → (y, (S_fin, x_last))."""
+    B, S, D = x.shape
+    H = D // cfg.rwkv_head_size
+    N = cfg.rwkv_head_size
+
+    xf = cast(x, jnp.float32)
+    xprev = cast(_token_shift(
+        x, state.x_att if state is not None else None), jnp.float32)
+    sx = xprev - xf
+
+    # data-dependent lerp (ddlerp): 5 mixed inputs for w,k,v,r,g
+    z = xf + sx * params["mu_base"].astype(jnp.float32)
+    tan = jnp.tanh(jnp.einsum("bsd,dpr->bspr", z,
+                              cast(params["ddlerp_a"], jnp.float32)))
+    dyn = jnp.einsum("bspr,prd->bspd", tan,
+                     cast(params["ddlerp_b"], jnp.float32))     # [B,S,5,D]
+    mixed = xf[:, :, None] + sx[:, :, None] * (
+        params["mu"].astype(jnp.float32)[None, None] + dyn)     # [B,S,5,D]
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    # decay (per-channel, data-dependent): logw = -exp(w0 + lora_w(xw))
+    wlo = jnp.tanh(xw @ cast(params["w_lora_a"], jnp.float32)) \
+        @ cast(params["w_lora_b"], jnp.float32)
+    logw = -jnp.exp(jnp.clip(params["w0"].astype(jnp.float32) + wlo,
+                             -20.0, 8.0))                        # [B,S,D] <0
+
+    cd = cfg.compute_dtype
+    rr = dense(params["wr"], cast(xr, cd), "bsd,de->bse", compute_dtype=cd)
+    kk = dense(params["wk"], cast(xk, cd), "bsd,de->bse", compute_dtype=cd)
+    vv = dense(params["wv"], cast(xv, cd), "bsd,de->bse", compute_dtype=cd)
+    gg = dense(params["wg"], cast(xg, cd), "bsd,de->bse", compute_dtype=cd)
+
+    def heads(t):
+        return cast(t, jnp.float32).reshape(B, S, H, N)
+
+    S0 = state.S if state is not None else None
+    core = wkv6_chunked if (chunked and S > 1) else wkv6_recurrent
+    o, S_fin = core(heads(rr), heads(kk), heads(vv),
+                    logw.reshape(B, S, H, N),
+                    params["u"].astype(jnp.float32), S0=S0)
+
+    o = groupnorm_heads(o, params["gn_scale"], params["gn_bias"])
+    o = o.reshape(B, S, D)
+    y = cast(o, cd) * jax.nn.silu(gg)
+    y = dense(params["wo"], y, "bse,ed->bsd", compute_dtype=cd)
+    return lconstraint(y, ("batch", "seq_r", "embed")), (S_fin, x[:, -1])
+
+
+def apply_channelmix(params, x, cfg, state_x_last=None):
+    """RWKV channel mix.  Returns (y, x_last)."""
+    cd = cfg.compute_dtype
+    xf = cast(x, jnp.float32)
+    sx = cast(_token_shift(x, state_x_last), jnp.float32) - xf
+    xk = cast(xf + sx * params["mu_k"].astype(jnp.float32), cd)
+    xr = cast(xf + sx * params["mu_r"].astype(jnp.float32), cd)
+    kk = dense(params["wk"], xk, "bsd,df->bsf", compute_dtype=cd)
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = lconstraint(kk, ("batch", "seq", "mlp"))
+    vv = dense(params["wv"], kk, "bsf,fd->bsd", compute_dtype=cd)
+    rr = jax.nn.sigmoid(dense(params["wr"], xr, "bsd,de->bse",
+                              compute_dtype=cd))
+    return lconstraint(rr * vv, ("batch", "seq_r", "embed")), x[:, -1]

@@ -1,0 +1,245 @@
+"""Residual blocks: spec construction + apply, per block kind.
+
+A "block" is one pre-norm residual pair: x += mixer(norm(x)); x += ffn(norm(x)).
+Block kinds: attn | local_attn | rglru | rwkv6 (configs.base.BLOCK_*).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.ad_checkpoint import checkpoint_name
+import jax.numpy as jnp
+
+from repro.configs.base import (BLOCK_ATTN, BLOCK_LOCAL, BLOCK_RGLRU,
+                                BLOCK_RWKV6)
+from repro.layers import attention as attn_lib
+from repro.layers import rglru as rglru_lib
+from repro.layers import rwkv as rwkv_lib
+from repro.layers.attention import KVCache
+from repro.layers.common import cast
+from repro.layers.mlp import apply_mlp, mlp_specs
+from repro.layers.moe import apply_moe, moe_specs
+from repro.layers.norms import apply_norm, norm_specs
+from repro.layers.rglru import RGLRUState
+from repro.layers.rwkv import RWKVState
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg, kind: str, cross: bool = False):
+    specs = {"norm1": norm_specs(cfg), "norm2": norm_specs(cfg)}
+    if kind in (BLOCK_ATTN, BLOCK_LOCAL):
+        specs["attn"] = attn_lib.attention_specs(cfg)
+    elif kind == BLOCK_RGLRU:
+        specs["rglru"] = rglru_lib.rglru_specs(cfg)
+    elif kind == BLOCK_RWKV6:
+        specs["timemix"] = rwkv_lib.timemix_specs(cfg)
+    else:
+        raise ValueError(kind)
+
+    if kind == BLOCK_RWKV6:
+        specs["channelmix"] = rwkv_lib.channelmix_specs(cfg)
+    elif cfg.moe is not None:
+        specs["moe"] = moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+
+    if cross:  # enc-dec decoder blocks get cross attention
+        specs["cross_norm"] = norm_specs(cfg)
+        specs["cross_attn"] = attn_lib.attention_specs(cfg, cross=True)
+    return specs
+
+
+def block_cache_specs(cfg, kind: str, batch: int, seq_len: int,
+                      cross_len: int = 0):
+    """Decode-time cache spec for one block."""
+    cache: dict[str, Any] = {}
+    if kind == BLOCK_ATTN:
+        cache["kv"] = KVCache.init_specs(cfg, batch, seq_len)
+    elif kind == BLOCK_LOCAL:
+        cache["kv"] = KVCache.init_specs(cfg, batch, seq_len,
+                                         window=cfg.attention_window)
+    elif kind == BLOCK_RGLRU:
+        cache["rglru"] = RGLRUState.init_specs(cfg, batch)
+    elif kind == BLOCK_RWKV6:
+        cache["rwkv"] = RWKVState.init_specs(cfg, batch)
+    if cross_len:
+        from repro.layers.common import ParamSpec
+        kv = cfg.num_kv_heads
+        shp = (batch, cross_len, kv, cfg.head_dim)
+        axes = ("batch", "cache_seq", "kv_heads", "qkv")
+        cache["cross_k"] = ParamSpec(shp, axes, dtype=cfg.compute_dtype,
+                                     init="zeros")
+        cache["cross_v"] = ParamSpec(shp, axes, dtype=cfg.compute_dtype,
+                                     init="zeros")
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Apply — full-sequence (train / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+
+def _prime_cache(t, seq_len: int, window: int, cache_len: Optional[int]):
+    """Lay out prefill K/V into decode-cache slots.
+
+    Full attention: positions 0..S-1 land at slots 0..S-1; the cache is
+    right-padded to ``cache_len`` so decode appends without wrapping.
+    Sliding window: the cache is a ring of size min(cache_len, window);
+    kept position p must land at slot p %% ring — a roll by S when the
+    prompt exceeds the ring (decode's ``slot = pos %% ring`` contract)."""
+    cache_len = cache_len or seq_len
+    if window:
+        ring = min(cache_len, window)
+        kept = t[:, -min(seq_len, ring):]
+        if kept.shape[1] < ring:
+            pad = jnp.zeros((t.shape[0], ring - kept.shape[1],
+                             *t.shape[2:]), t.dtype)
+            kept = jnp.concatenate([kept, pad], axis=1)
+        if seq_len > ring:
+            kept = jnp.roll(kept, seq_len % ring, axis=1)
+        return kept
+    if cache_len > seq_len:
+        pad = jnp.zeros((t.shape[0], cache_len - seq_len, *t.shape[2:]),
+                        t.dtype)
+        return jnp.concatenate([t, pad], axis=1)
+    return t
+
+
+def apply_block_seq(params, x, cfg, kind: str, *, positions,
+                    causal: bool = True, enc_out=None,
+                    cache_in=None, want_cache: bool = False,
+                    cache_len: Optional[int] = None):
+    """Returns (x, aux_loss, new_cache_or_None).
+
+    want_cache=True (prefill) also produces the block's decode cache,
+    sized ``cache_len`` (≥ prompt length) so decode can append.
+    cache_in is only consulted for recurrent kinds during chunked prefill.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = None
+    h = apply_norm(params["norm1"], x, cfg)
+
+    if kind in (BLOCK_ATTN, BLOCK_LOCAL):
+        window = cfg.attention_window if kind == BLOCK_LOCAL else 0
+        y, (k, v) = attn_lib.attention_layer(
+            params["attn"], h, cfg, positions=positions, causal=causal,
+            window=window)
+        if want_cache:
+            S = x.shape[1]
+
+            def to_cache(t):
+                if cfg.kv_cache_dtype == "int8":
+                    return jnp.clip(
+                        jnp.round(t.astype(jnp.float32) / cfg.kv_cache_scale),
+                        -128, 127).astype(jnp.int8)
+                return cast(t, cfg.resolved_kv_dtype)
+
+            new_cache = {"kv": KVCache(
+                k=_prime_cache(to_cache(k), S, window, cache_len),
+                v=_prime_cache(to_cache(v), S, window, cache_len))}
+    elif kind == BLOCK_RGLRU:
+        state = cache_in["rglru"] if cache_in is not None else None
+        if want_cache and state is None:
+            state = _zero_rglru_state(cfg, x.shape[0], x.dtype)
+        y, st = rglru_lib.apply_rglru(params["rglru"], h, cfg, state=state)
+        if want_cache:
+            new_cache = {"rglru": st}
+    elif kind == BLOCK_RWKV6:
+        state = cache_in["rwkv"] if cache_in is not None else None
+        y, (S_fin, x_last) = rwkv_lib.apply_timemix(
+            params["timemix"], h, cfg,
+            state=state, chunked=True)
+        if want_cache:
+            new_cache = {"rwkv": RWKVState(S=S_fin, x_att=x_last,
+                                           x_ffn=jnp.zeros_like(x_last))}
+    else:
+        raise ValueError(kind)
+    y = checkpoint_name(y, "attn_out")
+    x = x + y
+
+    if enc_out is not None:   # cross attention (enc-dec decoder)
+        h = apply_norm(params["cross_norm"], x, cfg)
+        y, (ck, cv) = attn_lib.attention_layer(
+            params["cross_attn"], h, cfg, positions=None, kv=enc_out)
+        x = x + y
+        if want_cache and new_cache is not None:
+            new_cache["cross_k"] = cast(ck, cfg.compute_dtype)
+            new_cache["cross_v"] = cast(cv, cfg.compute_dtype)
+
+    h = apply_norm(params["norm2"], x, cfg)
+    if kind == BLOCK_RWKV6:
+        y, xl = rwkv_lib.apply_channelmix(
+            params["channelmix"], h, cfg,
+            state_x_last=(cache_in["rwkv"].x_ffn if cache_in is not None
+                          else None))
+        if want_cache and new_cache is not None:
+            new_cache["rwkv"] = new_cache["rwkv"]._replace(x_ffn=cast(
+                xl, cfg.compute_dtype))
+    elif cfg.moe is not None:
+        y, aux = apply_moe(params["moe"], h, cfg)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    y = checkpoint_name(y, "ffn_out")
+    x = x + y
+    return x, aux, new_cache
+
+
+def _zero_rglru_state(cfg, batch, dtype):
+    return RGLRUState(
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, cfg.rnn_width),
+                       jnp.dtype(cfg.compute_dtype)),
+        h=jnp.zeros((batch, cfg.rnn_width), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Apply — single-token decode
+# ---------------------------------------------------------------------------
+
+
+def apply_block_decode(params, x, cfg, kind: str, *, pos, cache):
+    """x: [B,1,D]; pos: [B].  Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    h = apply_norm(params["norm1"], x, cfg)
+
+    if kind in (BLOCK_ATTN, BLOCK_LOCAL):
+        window = cfg.attention_window if kind == BLOCK_LOCAL else 0
+        y, kv = attn_lib.decode_attention_layer(
+            params["attn"], h, cfg, cache=cache["kv"], pos=pos, window=window)
+        new_cache["kv"] = kv
+    elif kind == BLOCK_RGLRU:
+        y, st = rglru_lib.decode_rglru(params["rglru"], h, cfg,
+                                       state=cache["rglru"])
+        new_cache["rglru"] = st
+    elif kind == BLOCK_RWKV6:
+        y, (S_fin, x_last) = rwkv_lib.apply_timemix(
+            params["timemix"], h, cfg, state=cache["rwkv"], chunked=False)
+        new_cache["rwkv"] = cache["rwkv"]._replace(
+            S=S_fin, x_att=cast(x_last, cfg.compute_dtype))
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if "cross_k" in cache:
+        h = apply_norm(params["cross_norm"], x, cfg)
+        y, _ = attn_lib.decode_attention_layer(
+            params["cross_attn"], h, cfg, cache=None, pos=pos,
+            cross_kv=(cache["cross_k"], cache["cross_v"]))
+        x = x + y
+
+    h = apply_norm(params["norm2"], x, cfg)
+    if kind == BLOCK_RWKV6:
+        y, xl = rwkv_lib.apply_channelmix(
+            params["channelmix"], h, cfg, state_x_last=cache["rwkv"].x_ffn)
+        new_cache["rwkv"] = new_cache["rwkv"]._replace(
+            x_ffn=cast(xl, cfg.compute_dtype))
+    elif cfg.moe is not None:
+        y, _ = apply_moe(params["moe"], h, cfg)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    return x + y, new_cache

@@ -1,0 +1,272 @@
+"""Model assembly: decoder-only LM (dense / MoE / hybrid / SSM via the
+config's layer pattern), VLM (stub vision frontend), and encoder-decoder
+(stub audio frontend).
+
+Layers are scanned over *pattern groups* (jax.lax.scan over stacked params)
+so the HLO size is depth-independent — essential for fast 512-device
+compiles and for per-layer roofline extraction.  Remainder layers that do
+not fill a whole group ("tail") are unrolled.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BLOCK_ATTN, ShapeConfig
+from repro.layers.common import (ParamSpec, cast, lconstraint, stack_specs)
+from repro.layers.embedding import embed_tokens, embedding_specs, logits
+from repro.layers.norms import apply_norm, norm_specs
+from repro.layers.rope import sinusoidal_positions
+from repro.models.blocks import (apply_block_decode, apply_block_seq,
+                                 block_cache_specs, block_specs)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ArchConfig) -> PyTree:
+    cross = cfg.kind == "encdec"
+    specs: Dict[str, Any] = {
+        "embedding": embedding_specs(cfg),
+        "final_norm": norm_specs(cfg),
+    }
+    group = {f"b{i}": block_specs(cfg, k, cross=cross)
+             for i, k in enumerate(cfg.layer_pattern)}
+    specs["blocks"] = stack_specs(group, cfg.num_groups_scan)
+    if cfg.tail_blocks:
+        specs["tail"] = {f"b{i}": block_specs(cfg, k, cross=cross)
+                         for i, k in enumerate(cfg.tail_blocks)}
+    if cfg.kind == "encdec":
+        enc_group = {"b0": block_specs(cfg, BLOCK_ATTN)}
+        specs["encoder"] = {
+            "blocks": stack_specs(enc_group, cfg.encoder_layers),
+            "final_norm": norm_specs(cfg),
+        }
+    if cfg.frontend is not None and cfg.frontend_dim:
+        specs["frontend_proj"] = ParamSpec(
+            (cfg.frontend_dim, cfg.d_model), (None, "embed"))
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> PyTree:
+    """Decode cache pytree (ParamSpecs) matching the scan structure."""
+    cross_len = seq_len if cfg.kind == "encdec" else 0
+    group = {f"b{i}": block_cache_specs(cfg, k, batch, seq_len, cross_len)
+             for i, k in enumerate(cfg.layer_pattern)}
+    out = {"blocks": stack_specs(group, cfg.num_groups_scan)}
+    if cfg.tail_blocks:
+        out["tail"] = {f"b{i}": block_cache_specs(cfg, k, batch, seq_len,
+                                                  cross_len)
+                       for i, k in enumerate(cfg.tail_blocks)}
+    return out
+
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "minimal":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat_policy == "save_block_outputs":
+        # §Perf A4: save exactly the per-layer psum outputs.  Under the
+        # sequence-sharded residual (A2) these are S/model-axis-sized, so
+        # the memory cost is ~1 GB/device while the backward pass skips
+        # recomputing the forward TP collectives.
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "ffn_out")
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _encoder_forward(params, frames, cfg):
+    """Stub-frontend encoder: frames [B,S,frontend_dim] → [B,S,D]."""
+    x = jnp.einsum("bsf,fd->bsd", cast(frames, cfg.compute_dtype),
+                   cast(params["frontend_proj"], cfg.compute_dtype))
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x = x + cast(sinusoidal_positions(pos, cfg.d_model), x.dtype)
+    x = lconstraint(x, ("batch", "seq_r", "embed"))
+
+    def body(carry, gparams):
+        h, _, _ = apply_block_seq(gparams["b0"], carry, cfg, BLOCK_ATTN,
+                                  positions=pos, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["encoder"]["blocks"])
+    return apply_norm(params["encoder"]["final_norm"], x, cfg)
+
+
+def forward_seq(params, cfg: ArchConfig, *, tokens, patches=None,
+                frames=None, want_cache: bool = False,
+                cache_len: int | None = None):
+    """Full-sequence forward.
+
+    tokens: [B, S_text].  VLM: patches [B,P,frontend_dim] prepended.
+    encdec: frames [B,S_enc,frontend_dim] through the encoder + cross attn.
+    Returns (hidden [B,S,D], aux_loss, cache_or_None).
+    """
+    x = embed_tokens(params["embedding"], tokens, cfg)
+    if cfg.kind == "vlm" and patches is not None:
+        pe = jnp.einsum("bpf,fd->bpd", cast(patches, cfg.compute_dtype),
+                        cast(params["frontend_proj"], cfg.compute_dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+        x = lconstraint(x, ("batch", "seq_r", "embed"))
+    enc_out = None
+    if cfg.kind == "encdec":
+        enc_out = _encoder_forward(params, frames, cfg)
+
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.kind == "encdec":   # seamless: sinusoidal absolute positions
+        x = x + cast(sinusoidal_positions(positions, cfg.d_model), x.dtype)
+
+    def group_fn(carry, gparams):
+        h, aux = carry
+        caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            h, a, nc = apply_block_seq(
+                gparams[f"b{i}"], h, cfg, kind, positions=positions,
+                causal=True, enc_out=enc_out, want_cache=want_cache,
+                cache_len=cache_len)
+            aux = aux + a
+            caches[f"b{i}"] = nc
+        return (h, aux), caches
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    carry, scan_caches = jax.lax.scan(_remat(group_fn, cfg), carry,
+                                      params["blocks"])
+    x, aux = carry
+
+    tail_caches = {}
+    for i, kind in enumerate(cfg.tail_blocks):
+        x, a, nc = apply_block_seq(
+            params["tail"][f"b{i}"], x, cfg, kind, positions=positions,
+            causal=True, enc_out=enc_out, want_cache=want_cache,
+            cache_len=cache_len)
+        aux = aux + a
+        tail_caches[f"b{i}"] = nc
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    cache = None
+    if want_cache:
+        cache = {"blocks": scan_caches}
+        if cfg.tail_blocks:
+            cache["tail"] = tail_caches
+    return x, aux, cache
+
+
+def forward_train(params, batch, cfg: ArchConfig):
+    """batch → (logits [B,S_text,V] f32, aux_loss).
+
+    VLM: the patch prefix carries no loss, so hidden states are sliced to
+    the text suffix BEFORE the vocab projection — saves the (huge) logits
+    matmul + its collectives over patch positions."""
+    x, aux, _ = forward_seq(params, cfg, tokens=batch["tokens"],
+                            patches=batch.get("patches"),
+                            frames=batch.get("frames"))
+    if cfg.kind == "vlm" and batch.get("patches") is not None:
+        x = x[:, batch["patches"].shape[1]:]
+    return logits(params["embedding"], x, cfg), aux
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: int | None = None):
+    """Prefill: returns (last-token logits [B,V], cache).
+
+    cache_len (≥ prompt length) sizes the decode cache so generation can
+    append; defaults to the prompt length (the dry-run decode cells build
+    their seq_len-sized caches directly from cache_specs)."""
+    x, _, cache = forward_seq(params, cfg, tokens=batch["tokens"],
+                              patches=batch.get("patches"),
+                              frames=batch.get("frames"), want_cache=True,
+                              cache_len=cache_len)
+    lg = logits(params["embedding"], x[:, -1:], cfg)
+    return lg[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ArchConfig, *, token, pos, cache):
+    """One serving step.  token: [B] int32, pos: [B] int32 (absolute).
+    Returns (logits [B,V] f32, new_cache)."""
+    x = embed_tokens(params["embedding"], token[:, None], cfg)
+    if cfg.kind == "encdec":
+        x = x + cast(sinusoidal_positions(pos[:, None], cfg.d_model), x.dtype)
+
+    def group_fn(carry, xs):
+        h = carry
+        gparams, gcache = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            h, nc = apply_block_decode(gparams[f"b{i}"], h, cfg, kind,
+                                       pos=pos, cache=gcache[f"b{i}"])
+            new_caches[f"b{i}"] = nc
+        return h, new_caches
+
+    x, new_scan_cache = jax.lax.scan(
+        group_fn, x, (params["blocks"], cache["blocks"]))
+
+    new_cache = {"blocks": new_scan_cache}
+    if cfg.tail_blocks:
+        new_tail = {}
+        for i, kind in enumerate(cfg.tail_blocks):
+            x, nc = apply_block_decode(params["tail"][f"b{i}"], x, cfg, kind,
+                                       pos=pos, cache=cache["tail"][f"b{i}"])
+            new_tail[f"b{i}"] = nc
+        new_cache["tail"] = new_tail
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params["embedding"], x, cfg)
+    return lg[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch × shape) — the dry run contract
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {"tokens", "labels" [, "patches"/"frames"]}
+    prefill: {"tokens" [, "patches"/"frames"]}
+    decode:  {"token", "pos"}   (cache comes from cache_specs)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        return {"token": sd((B,), i32), "pos": sd((B,), i32)}
+
+    specs: Dict[str, Any] = {}
+    if cfg.kind == "vlm":
+        P = min(cfg.frontend_tokens, S // 4)
+        specs["patches"] = sd((B, P, cfg.frontend_dim), cdt)
+        specs["tokens"] = sd((B, S - P), i32)
+        if shape.kind == "train":
+            specs["labels"] = sd((B, S - P), i32)
+    elif cfg.kind == "encdec":
+        specs["frames"] = sd((B, S, cfg.frontend_dim), cdt)
+        specs["tokens"] = sd((B, S), i32)
+        if shape.kind == "train":
+            specs["labels"] = sd((B, S), i32)
+    else:
+        specs["tokens"] = sd((B, S), i32)
+        if shape.kind == "train":
+            specs["labels"] = sd((B, S), i32)
+    return specs

@@ -1,0 +1,86 @@
+"""AdamW in raw JAX, spec-driven so optimizer state inherits parameter
+sharding (FSDP shards m/v exactly like the weights — ZeRO)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ParamSpec, is_spec, spec_map
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "warmup_cosine"
+
+
+def opt_state_specs(param_specs: PyTree) -> Dict[str, PyTree]:
+    """m/v mirror the parameter specs (same logical axes → same sharding)."""
+    def f32(s: ParamSpec):
+        return ParamSpec(s.shape, s.axes, dtype="float32", init="zeros")
+    return {"m": spec_map(f32, param_specs), "v": spec_map(f32, param_specs)}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw_update(params: PyTree, grads: PyTree, opt_state: Dict[str, PyTree],
+                 step: jax.Array, hp: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    from repro.optim.schedule import SCHEDULES
+    lr = SCHEDULES[hp.schedule](step, peak_lr=hp.peak_lr,
+                                warmup_steps=hp.warmup_steps,
+                                total_steps=hp.total_steps)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if hp.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - hp.b1 ** t
+    c2 = 1.0 - hp.b2 ** t
+
+    def upd(p, g, m, v):
+        m_new = hp.b1 * m + (1 - hp.b1) * g
+        v_new = hp.b2 * v + (1 - hp.b2) * jnp.square(g)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + hp.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + hp.weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,158 @@
+"""Three-term roofline vs TPU v5e, from the dry-run's compiled artifact.
+
+Terms (seconds, per step, per device — post-SPMD HLO shapes are per-device):
+
+    compute    = HLO_dot_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+    memory     = HLO_traffic_bytes / HBM_bw            (819 GB/s)
+    collective = wire_bytes / ICI_link_bw              (50 GB/s/link)
+
+HLO_dot_FLOPs / traffic / wire come from roofline.hlo.analyze (exact
+while-trip-count multipliers).  ``traffic`` counts operands+outputs of
+dots, collectives and scatter/gather ops — an HBM-traffic *model* (fusion
+can only reduce it), recorded as such in EXPERIMENTS.md.
+
+MODEL_FLOPS is the analytic useful-work count (6·N_active·D etc.); the
+ratio MODEL_FLOPS/HLO_FLOPs exposes remat/capacity/cond waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict
+
+from repro.configs.base import (ArchConfig, ShapeConfig, BLOCK_ATTN,
+                                BLOCK_LOCAL, BLOCK_RGLRU, BLOCK_RWKV6,
+                                active_param_count)
+
+V5E = {
+    "peak_flops": 197e12,      # bf16 per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link direction (~1 axis)
+}
+
+
+# ---------------------------------------------------------------------------
+# Analytic useful-FLOPs model (global, whole step)
+# ---------------------------------------------------------------------------
+
+
+def _attn_flops_fwd(cfg: ArchConfig, B: int, S: int, kind: str) -> float:
+    """score+av matmuls for one layer, forward, causal-halved."""
+    H, dh = cfg.num_heads, cfg.head_dim
+    if kind == BLOCK_LOCAL and cfg.attention_window:
+        eff = min(cfg.attention_window, S)
+        pairs = S * eff - eff * (eff - 1) / 2 if S >= eff else S * (S + 1) / 2
+    else:
+        pairs = S * (S + 1) / 2
+    return 4.0 * B * H * dh * pairs
+
+
+def _mixer_state_flops_fwd(cfg: ArchConfig, B: int, S: int, kind: str) -> float:
+    if kind == BLOCK_RWKV6:
+        H = cfg.d_model // cfg.rwkv_head_size
+        N = cfg.rwkv_head_size
+        return 6.0 * B * S * H * N * N
+    if kind == BLOCK_RGLRU:
+        return 8.0 * B * S * cfg.rnn_width * cfg.conv1d_width
+    return 0.0
+
+
+def _n_matmul(cfg: ArchConfig) -> float:
+    """Active parameters participating in GEMMs (gathers excluded)."""
+    n = float(active_param_count(cfg))
+    if not cfg.tie_embeddings:
+        n -= cfg.vocab_size * cfg.d_model   # input embedding gather is free
+    return n
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    kinds = cfg.block_kinds()
+    if shape.kind == "decode":
+        f = 2.0 * _n_matmul(cfg) * B
+        for k in kinds:
+            if k in (BLOCK_ATTN, BLOCK_LOCAL):
+                eff = min(cfg.attention_window, S) if k == BLOCK_LOCAL else S
+                f += 4.0 * B * cfg.num_heads * cfg.head_dim * eff
+            elif k == BLOCK_RWKV6:
+                H = cfg.d_model // cfg.rwkv_head_size
+                f += 6.0 * B * H * cfg.rwkv_head_size ** 2
+        if cfg.kind == "encdec":
+            f += 4.0 * B * cfg.num_heads * cfg.head_dim * S * len(kinds)
+        return f
+
+    factor = 6.0 if shape.kind == "train" else 2.0
+    att_factor = 3.0 if shape.kind == "train" else 1.0
+    f = factor * _n_matmul(cfg) * B * S
+    for k in kinds:
+        f += att_factor * _attn_flops_fwd(cfg, B, S, k)
+        f += att_factor * _mixer_state_flops_fwd(cfg, B, S, k)
+    if cfg.kind == "encdec":
+        # encoder blocks (non-causal ⇒ full pairs ≈ 2× causal) + cross attn
+        f += att_factor * cfg.encoder_layers * 2 * _attn_flops_fwd(
+            cfg, B, S, BLOCK_ATTN)
+        f += att_factor * len(kinds) * 2 * _attn_flops_fwd(cfg, B, S, BLOCK_ATTN)
+    return f
+
+
+def model_bytes_decode(cfg: ArchConfig, shape: ShapeConfig,
+                       param_bytes_total: float, cache_bytes: float) -> float:
+    """Useful HBM traffic for one decode step (global): read every live
+    parameter once + the whole KV/recurrent cache once."""
+    return param_bytes_total + cache_bytes
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device HLO-derived
+    hlo_flops_dev: float
+    hlo_traffic_dev: float
+    wire_bytes_dev: float
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    # usefulness
+    model_flops_global: float
+    useful_ratio: float          # MODEL / (HLO × chips)
+    mfu_at_roofline: float       # MODEL/(chips·peak) ÷ max(term)
+    # raw cost_analysis cross-check (body-once counting)
+    xla_flops_dev: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return asdict(self)
+
+
+def build_report(arch: str, shape_name: str, mesh_name: str, chips: int,
+                 costs, cfg: ArchConfig, shape: ShapeConfig,
+                 xla_flops: float = 0.0) -> RooflineReport:
+    t_c = costs.flops / V5E["peak_flops"]
+    t_m = costs.traffic / V5E["hbm_bw"]
+    t_x = costs.coll_wire / V5E["ici_bw"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = costs.flops * chips
+    t_bound = max(terms.values())
+    ideal = mf / (chips * V5E["peak_flops"])
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops_dev=costs.flops, hlo_traffic_dev=costs.traffic,
+        wire_bytes_dev=costs.coll_wire,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops_global=mf,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+        mfu_at_roofline=ideal / t_bound if t_bound else 0.0,
+        xla_flops_dev=xla_flops,
+    )

@@ -1,0 +1,362 @@
+"""Post-SPMD HLO text analysis: exact FLOP / collective / traffic accounting
+with while-loop trip-count multipliers.
+
+Why: ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers program is undercounted by ~num_layers×.  The optimized HLO
+carries ``backend_config={"known_trip_count":{"n":...}}`` on every while op;
+we parse the module into computations, build the call graph (while bodies,
+fusions, conditionals, calls), and accumulate counts with exact multipliers.
+
+All shapes in post-SPMD HLO are PER-DEVICE, so every number returned here is
+per-device.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+
+
+def _split_def(line: str):
+    """'%name = TYPE kind(rest' → (name, type_str, kind, rest) or None.
+
+    TYPE may be a tuple like '(s32[], /*index=5*/f32[...])' containing '='
+    inside comments, so we scan balanced parens instead of regexing."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i < len(line) and line[i] == "(":
+        depth = 0
+        j = i
+        while j < len(line):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        rest_start = j + 1
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+        rest_start = j
+    mk = _KIND_RE.match(line, rest_start)
+    if not mk:
+        return None
+    return name, type_str, mk.group(1), line[mk.end():]
+
+
+def _parse_shape(s: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return None
+    dt, dims = m.group(1), m.group(2)
+    if dt not in DTYPE_BYTES:
+        return None
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    return dt, shape
+
+
+def _nbytes(dt_shape) -> int:
+    dt, shape = dt_shape
+    n = DTYPE_BYTES[dt]
+    for d in shape:
+        n *= d
+    return n
+
+
+def _numel(dt_shape) -> int:
+    n = 1
+    for d in dt_shape[1]:
+        n *= d
+    return n
+
+
+@dataclass
+class OpInfo:
+    name: str
+    kind: str
+    out: Optional[Tuple[str, Tuple[int, ...]]]
+    line: str
+    operands: Tuple[str, ...] = ()
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    symbols: Dict[str, Tuple[str, Tuple[int, ...]]] = field(default_factory=dict)
+    # (callee, multiplier) edges; while bodies with unknown trip counts are
+    # stored as (body, cond) in while_edges and resolved in analyze()
+    calls: List[Tuple[str, float]] = field(default_factory=list)
+    while_edges: List[Tuple[str, str]] = field(default_factory=list)
+    int_consts: Dict[str, int] = field(default_factory=dict)
+    root_compare_const: Optional[str] = None
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    traffic: float = 0.0                      # approx HBM bytes (see below)
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_wire: float = 0.0                    # modeled wire bytes
+    # collectives deferred for user analysis: (name, kind, size, group)
+    pending_coll: List[Tuple[str, str, float, int]] = field(default_factory=list)
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        if raw and not raw[0].isspace() and "->" in raw and "{" in raw:
+            m = _COMP_RE.match(raw)
+            if m:
+                current = Computation(m.group(1))
+                comps[current.name] = current
+                if raw.startswith("ENTRY"):
+                    entry_name = current.name
+                continue
+        if current is None:
+            continue
+        parsed = _split_def(raw)
+        if parsed is None:
+            continue
+        name, out_type, kind, rest = parsed
+        out = _parse_shape(out_type) if not out_type.startswith("(") else None
+        op = OpInfo(name, kind, out, raw, tuple(_operands(rest)))
+        current.ops.append(op)
+        if out is not None:
+            current.symbols[name] = out
+        _account(current, op, rest, raw, out_type)
+    for comp in comps.values():
+        _finalize_comp(comp)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _finalize_comp(comp: Computation) -> None:
+    """Resolve deferred collective costs with user analysis (AR→DS = RS)."""
+    if not comp.pending_coll:
+        return
+    users: Dict[str, List[OpInfo]] = defaultdict(list)
+    for op in comp.ops:
+        for o in op.operands:
+            users[o].append(op)
+    for name, kind, size, gsize in comp.pending_coll:
+        eff_kind = kind
+        if kind == "all-reduce":
+            u = users.get(name, [])
+            if u and all(x.kind == "dynamic-slice" for x in u):
+                eff_kind = "reduce-scatter-folded"
+        if eff_kind == "reduce-scatter-folded":
+            # input (= the AR tensor) is size; RS wire = size·(g-1)/g
+            wire = size * (gsize - 1) / gsize
+            comp.coll_bytes["reduce-scatter"] += size
+        else:
+            wire = _wire_bytes(kind, size, gsize)
+            comp.coll_bytes[kind] += size
+        comp.coll_wire += wire
+
+
+def _operands(rest: str) -> List[str]:
+    """Names of top-level operands in 'a, %b, ...), attrs'."""
+    depth = 0
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                out.append(token)
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(token)
+            token = ""
+            continue
+        token += ch
+    return [t.strip().lstrip("%") for t in out if t.strip()]
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _account(comp: Computation, op: OpInfo, rest: str, raw: str,
+             out_type: str = "") -> None:
+    kind = op.kind
+    if kind == "constant":
+        m = re.match(r"\s*(\d+)\)", rest) if op.out and op.out[0].startswith(
+            ("s", "u")) else None
+        if m:
+            comp.int_consts[op.name] = int(m.group(1))
+        return
+    if kind == "compare" and "ROOT" in raw and "direction=LT" in raw:
+        ops_ = _operands(rest)
+        if len(ops_) == 2:
+            comp.root_compare_const = ops_[1]
+        return
+    if kind == "while":
+        mb = _CALLEE_RE.search(raw)
+        mc = _COND_RE.search(raw)
+        m = _TRIP_RE.search(raw)
+        if m and mb:
+            trip = float(m.group(1))
+            comp.calls.append((mb.group(1), trip))
+            if mc:
+                comp.calls.append((mc.group(1), trip))
+        elif mb and mc:
+            # pre-optimization dumps carry no known_trip_count; recover the
+            # bound from the scan condition (induction < constant, step 1)
+            comp.while_edges.append((mb.group(1), mc.group(1)))
+        return
+    if kind == "conditional":
+        mb = _BRANCHES_RE.search(raw)
+        if mb:
+            # count every branch once: for our cond-skip attention this is the
+            # upper bound (the compute branch) plus a trivial identity branch.
+            for callee in mb.group(1).split(","):
+                comp.calls.append((callee.strip().lstrip("%"), 1.0))
+        return
+    if kind in ("fusion", "call", "map", "reduce", "reduce-window", "sort",
+                "scatter", "select-and-scatter"):
+        for m in _CALLEE_RE.finditer(raw):
+            comp.calls.append((m.group(1), 1.0))
+        # fall through: scatter/reduce also contribute traffic below
+    if kind == "dot":
+        ops_ = _operands(rest)
+        lhs = comp.symbols.get(ops_[0]) if ops_ else None
+        contract = 1
+        mc = _CONTRACT_RE.search(raw)
+        if lhs is not None and mc is not None and mc.group(1):
+            for idx in mc.group(1).split(","):
+                contract *= lhs[1][int(idx)]
+        if op.out is not None:
+            op_flops = 2.0 * _numel(op.out) * contract
+            comp.flops += op_flops
+            comp.traffic += _nbytes(op.out)
+            for o in ops_[:2]:
+                s = comp.symbols.get(o)
+                if s is not None:
+                    comp.traffic += _nbytes(s)
+        return
+    if kind in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                "logistic", "sine", "cosine", "exponential-minus-one"):
+        if op.out is not None:
+            comp.transcendentals += _numel(op.out)
+        return
+    for c in COLLECTIVES:
+        if kind == c:
+            size = _nbytes(op.out) if op.out is not None else 0
+            # tuple-shaped collectives: sum listed array shapes
+            if op.out is None:
+                size = sum(_nbytes(s) for s in
+                           (_parse_shape(t.strip()) for t in
+                            re.findall(r"\w+\[[\d,]*\]", out_type))
+                           if s is not None)
+            groups = _GROUPS_RE.search(raw)
+            gsize = int(groups.group(2)) if groups else 2
+            # wire accounting deferred to _finalize_comp: an all-reduce whose
+            # only consumer is a dynamic-slice is a reduce-scatter in
+            # disguise (the TPU pipeline's reduce-scatter-creator rewrites
+            # it; the CPU pipeline never does) — cost it as RS.
+            comp.pending_coll.append((op.name, c, float(size), gsize))
+            comp.traffic += size
+            return
+
+
+def _wire_bytes(kind: str, out_bytes: float, group: int) -> float:
+    """Ring-model bytes per device through its ICI links."""
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (group - 1) / group
+    if kind == "all-gather":
+        return out_bytes * (group - 1) / group
+    if kind == "reduce-scatter":
+        return out_bytes * (group - 1)        # input = out × group
+    if kind == "all-to-all":
+        return out_bytes * (group - 1) / group
+    if kind == "collective-permute":
+        return out_bytes
+    return out_bytes
+
+
+@dataclass
+class ModuleCosts:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    traffic: float = 0.0
+    coll_wire: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+
+def _resolve_trip(comps: Dict[str, Computation], cond_name: str) -> float:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1.0
+    if cond.root_compare_const is not None:
+        v = cond.int_consts.get(cond.root_compare_const)
+        if v is not None:
+            return float(v)
+    if len(cond.int_consts) == 1:     # single integer constant → the bound
+        return float(next(iter(cond.int_consts.values())))
+    return 1.0
+
+
+def analyze(hlo_text: str) -> ModuleCosts:
+    """Walk the call graph from ENTRY with trip-count multipliers."""
+    comps = parse_module(hlo_text)
+    entry = comps.get("__entry__")
+    total = ModuleCosts()
+    if entry is None:
+        return total
+
+    def walk(comp: Computation, mult: float, seen: tuple):
+        if comp.name in seen:       # defensive: HLO call graphs are acyclic
+            return
+        total.flops += mult * comp.flops
+        total.transcendentals += mult * comp.transcendentals
+        total.traffic += mult * comp.traffic
+        total.coll_wire += mult * comp.coll_wire
+        for k, v in comp.coll_bytes.items():
+            total.coll_bytes[k] += mult * v
+            total.coll_counts[k] += int(mult)
+        for callee, m in comp.calls:
+            c = comps.get(callee)
+            if c is not None:
+                walk(c, mult * m, seen + (comp.name,))
+        for body, cond in comp.while_edges:
+            trip = _resolve_trip(comps, cond)
+            for name in (body, cond):
+                c = comps.get(name)
+                if c is not None:
+                    walk(c, mult * trip, seen + (comp.name,))
+
+    walk(entry, 1.0, ())
+    return total

@@ -1,0 +1,143 @@
+"""Batched serving engine: continuous-batching-lite over fixed slots.
+
+A fixed pool of B slots runs lockstep decode steps (one jit'd program, the
+same one the decode dry-run cells lower).  Requests are admitted into free
+slots between steps: a slot prefill writes its KV into the batch cache at
+the slot index.  Finished slots (EOS or max_tokens) free immediately —
+admission latency is one decode step, the practical property continuous
+batching provides.
+
+For simplicity the reference engine prefilires per-request with batch-1
+programs and scatters into the pool cache; a production engine would batch
+prefills — the scatter/cache layout already supports it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.layers.common import materialize, shape_structs
+from repro.models import lm
+from repro.serving.serve_step import greedy_sample
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray             # [S_prompt] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params: PyTree, *, slots: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        cspecs = lm.cache_specs(cfg, slots, max_seq)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)), cspecs,
+            is_leaf=lambda x: hasattr(x, "axes"))
+        self.pos = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.last_token = np.zeros((slots,), np.int32)
+
+        self._decode = jax.jit(
+            lambda p, c, t, po: lm.decode_step(p, cfg, token=t, pos=po,
+                                               cache=c))
+        self._prefill_one = jax.jit(
+            lambda p, b: lm.prefill(p, b, cfg, cache_len=max_seq))
+
+    # ------------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def admit(self, req: Request) -> bool:
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, cache1 = self._prefill_one(self.params, {"tokens": prompt})
+        # scatter the request's prefill cache into the pool at `slot`
+        self.cache = jax.tree.map(
+            lambda pool, one: _scatter_slot(pool, one, slot),
+            self.cache, cache1)
+        tok = int(greedy_sample(logits)[0])
+        req.output.append(tok)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.last_token[slot] = tok
+        return True
+
+    def step(self):
+        """One lockstep decode step over the whole pool."""
+        if all(r is None for r in self.active):
+            return
+        tokens = jnp.asarray(self.last_token, jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          tokens, pos)
+        nxt = np.asarray(greedy_sample(logits))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.last_token[i] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.output) >= req.max_new_tokens \
+                    or self.pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.active[i] = None
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        while pending or any(r is not None for r in self.active):
+            while pending and self._free_slots():
+                if not self.admit(pending[0]):
+                    break
+                pending.pop(0)
+            self.step()
+            done.extend(r for r in requests if r.done)
+            requests = [r for r in requests if not r.done]
+        return done
+
+
+def _scatter_slot(pool, one, slot: int):
+    """Insert a batch-1 cache leaf into the pool cache at slot index.
+
+    The batch axis is the first axis where the request leaf has size 1 and
+    the pool leaf doesn't (cache leaves are [B,...] or stacked [G,B,...]).
+    Sequence axes may be shorter on the request side (prompt < pool ring);
+    fresh prompts align at offset 0 with the pool's ring indexing (engine
+    admits prompts ≤ window for sliding-window models)."""
+    batch_axis = None
+    for i in range(pool.ndim):
+        if one.shape[i] == 1 and pool.shape[i] != 1:
+            batch_axis = i
+            break
+    if batch_axis is None:
+        return pool                      # replicated / batch-free leaf
+    dst = tuple(slice(slot, slot + 1) if ax == batch_axis
+                else slice(0, min(pool.shape[ax], one.shape[ax]))
+                for ax in range(pool.ndim))
+    src = tuple(slice(0, 1) if ax == batch_axis
+                else slice(0, min(pool.shape[ax], one.shape[ax]))
+                for ax in range(pool.ndim))
+    return pool.at[dst].set(one[src].astype(pool.dtype))

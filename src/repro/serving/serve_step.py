@@ -1,0 +1,50 @@
+"""Serving steps: prefill (context ingest → cache) and decode (one token).
+
+These are the functions the decode_* / long_* dry-run cells lower: decode is
+a single new-token step against a seq_len-sized cache (ring-buffered for
+sliding-window blocks, O(1) recurrent state for SSM/hybrid blocks)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers.common import activate_rules
+from repro.models import lm
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ArchConfig, act_rules: Optional[Dict] = None):
+    def prefill_step(params, batch):
+        with activate_rules(act_rules):
+            last_logits, cache = lm.prefill(params, batch, cfg)
+        return last_logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, act_rules: Optional[Dict] = None):
+    """decode_step(params, cache, token [B], pos [B]) → (logits, cache).
+
+    The cache argument is donatable (same sharding in/out) — serving engines
+    run it in a double-buffer-free loop."""
+    def decode_step(params, cache, token, pos):
+        with activate_rules(act_rules):
+            logits, new_cache = lm.decode_step(params, cfg, token=token,
+                                               pos=pos, cache=cache)
+        return logits, new_cache
+    return decode_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, rng: jax.Array, temperature: float = 1.0):
+    if temperature == 0.0:
+        return greedy_sample(logits)
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,67 @@
+"""ConvCore (the paper IP abstraction): layer-at-a-time semantics, banking
+plans, int8 datapath, quantized float convenience path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConvCore, ConvCoreConfig, paper_workload
+from repro.core.banking import plan_banks
+from repro.kernels import ref
+
+RNG = np.random.default_rng(17)
+
+
+def test_paper_workload_shapes():
+    wl = paper_workload()
+    core = ConvCore(ConvCoreConfig(backend="ref"))
+    x = jnp.asarray(RNG.normal(size=wl["x"]), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=wl["w"]), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=wl["bias"]), jnp.float32)
+    out = core.apply_layer(x, w, b)
+    assert out.shape == (1, 222, 222, 8)   # the paper's 222×222 output
+
+
+def test_pallas_and_ref_backends_agree():
+    x = jnp.asarray(RNG.normal(size=(1, 16, 16, 8)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(3, 3, 8, 4)), jnp.float32)
+    a = ConvCore(ConvCoreConfig(backend="pallas")).apply_layer(x, w)
+    b = ConvCore(ConvCoreConfig(backend="ref")).apply_layer(x, w)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_int8_datapath_end_to_end():
+    x = jnp.asarray(RNG.integers(-128, 128, (1, 12, 12, 4)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-128, 128, (3, 3, 4, 4)), jnp.int8)
+    core = ConvCore(ConvCoreConfig(int8=True))
+    out = core.apply_layer(x, w)
+    np.testing.assert_array_equal(out, ref.conv2d_ref_int8(x, w))
+
+
+def test_quantized_float_path_accuracy():
+    x = jnp.asarray(RNG.normal(size=(1, 12, 12, 8)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(3, 3, 8, 4)), jnp.float32) * 0.1
+    core = ConvCore(ConvCoreConfig())
+    got = core.apply_quantized_layer(x, w)
+    want = ref.conv2d_ref(x, w)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.03, rel
+
+
+def test_multi_layer_chaining():
+    """'Output BRAMs are the next layer's input' (§4.1): chain two layers."""
+    core = ConvCore(ConvCoreConfig(backend="pallas"))
+    x = jnp.asarray(RNG.normal(size=(1, 14, 14, 4)), jnp.float32)
+    w1 = jnp.asarray(RNG.normal(size=(3, 3, 4, 8)), jnp.float32)
+    w2 = jnp.asarray(RNG.normal(size=(3, 3, 8, 4)), jnp.float32)
+    h = core.apply_layer(x, w1)
+    out = core.apply_layer(h.astype(jnp.float32), w2)
+    want = ref.conv2d_ref(ref.conv2d_ref(x, w1), w2)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+def test_vmem_plan_for_paper_layer():
+    plan = plan_banks(224, 224, 8, 8, in_bytes=1)
+    assert plan.fits_vmem
+    assert plan.cin_banks == 4 and plan.kout_banks == 4   # paper defaults fit

@@ -1,0 +1,52 @@
+"""Data pipeline: determinism, seekability, host sharding."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM, fingerprint, make_pipeline
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=128, seq_len=32, global_batch=8, seed=7)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_batch_is_pure_function_of_step():
+    p1 = SyntheticLM(_cfg())
+    p2 = SyntheticLM(_cfg())
+    for step in (0, 5, 1000):
+        a, b = p1.batch_at(step), p2.batch_at(step)
+        assert fingerprint(a) == fingerprint(b)
+
+
+def test_steps_differ():
+    p = SyntheticLM(_cfg())
+    assert fingerprint(p.batch_at(1)) != fingerprint(p.batch_at(2))
+
+
+def test_labels_are_next_tokens():
+    p = SyntheticLM(_cfg())
+    b = p.batch_at(0)
+    # structure: labels[t] is mostly perm[tokens[t]] (90%), so a model can
+    # learn it; verify the shift relationship holds exactly
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_partitions_batch():
+    full = SyntheticLM(_cfg(), process_index=0, process_count=1)
+    h0 = SyntheticLM(_cfg(), process_index=0, process_count=2)
+    h1 = SyntheticLM(_cfg(), process_index=1, process_count=2)
+    assert h0.local_batch == h1.local_batch == 4
+    b0, b1 = h0.batch_at(3), h1.batch_at(3)
+    # different hosts draw independent rows
+    assert fingerprint(b0) != fingerprint(b1)
+
+
+def test_textfile_pipeline(tmp_path):
+    path = tmp_path / "corpus.txt"
+    path.write_bytes(b"hello world, this is a tiny corpus for testing " * 40)
+    p = make_pipeline(_cfg(kind="textfile", path=str(path), vocab_size=256))
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    assert fingerprint(p.batch_at(0)) == fingerprint(p.batch_at(0))

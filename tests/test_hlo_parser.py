@@ -1,0 +1,68 @@
+"""The roofline HLO parser against compiled programs with known costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo import analyze, parse_module
+
+
+def test_single_dot_flops_exact():
+    m, k, n = 64, 128, 32
+
+    def f(a, b):
+        return a @ b
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    costs = analyze(compiled.as_text())
+    assert costs.flops == 2 * m * k * n
+
+
+def test_scan_trip_count_multiplier():
+    """A scan of L matmuls must count L× the body flops — the while-body
+    correction cost_analysis() misses."""
+    L, d = 7, 32
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((L, d, d), jnp.float32),
+        jax.ShapeDtypeStruct((4, d), jnp.float32)).compile()
+    costs = analyze(compiled.as_text())
+    want = L * 2 * 4 * d * d
+    assert costs.flops == want, (costs.flops, want)
+    # XLA's own number counts the body once — our correction must exceed it
+    xla = compiled.cost_analysis().get("flops", 0)
+    assert costs.flops > xla
+
+
+def test_nested_scan_multiplies():
+    Lo, Li, d = 3, 5, 16
+
+    def f(w, x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            ci, _ = jax.lax.scan(inner, c, None, length=Li)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, None, length=Lo)
+        return c
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((d, d), jnp.float32),
+        jax.ShapeDtypeStruct((2, d), jnp.float32)).compile()
+    costs = analyze(compiled.as_text())
+    assert costs.flops == Lo * Li * 2 * 2 * d * d
+
+
+def test_parse_module_finds_entry():
+    compiled = jax.jit(lambda x: x * 2).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    comps = parse_module(compiled.as_text())
+    assert "__entry__" in comps

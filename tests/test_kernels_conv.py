@@ -1,0 +1,90 @@
+"""conv2d_ws Pallas kernel vs the pure-jnp oracle: shape/dtype sweeps,
+banking variants, int8/wrap8 datapaths, bias preload."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.conv2d_ws import conv2d_ws
+
+RNG = np.random.default_rng(42)
+
+
+def _f32(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def _i8(*shape):
+    return jnp.asarray(RNG.integers(-128, 128, size=shape), jnp.int8)
+
+
+@pytest.mark.parametrize("n,h,w,c,k,kh", [
+    (1, 8, 8, 4, 4, 3),
+    (2, 16, 12, 8, 8, 3),
+    (1, 224, 224, 8, 8, 3),          # the paper's §5.2 workload
+    (2, 10, 10, 16, 4, 1),           # 1×1 conv (≡ GEMM)
+    (1, 9, 9, 4, 8, 5),              # 5×5 kernel
+])
+def test_float_matches_oracle(n, h, w, c, k, kh):
+    x, wgt, b = _f32(n, h, w, c), _f32(kh, kh, c, k), _f32(k)
+    got = ops.conv2d(x, wgt, b)
+    want = ref.conv2d_ref(x, wgt, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("banks", [(1, 1), (2, 2), (4, 4), (4, 1), (1, 4),
+                                   (8, 8)])
+def test_banking_invariance(banks):
+    """Any bank decomposition computes the same convolution (the paper's
+    4-way split is a dataflow choice, not a semantic one)."""
+    cb, kb = banks
+    x, wgt, b = _f32(1, 12, 12, 8), _f32(3, 3, 8, 8), _f32(8)
+    got = conv2d_ws(x, wgt, b, cin_banks=cb, kout_banks=kb, interpret=True)
+    want = ref.conv2d_ref(x, wgt, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_divisibility_enforced():
+    x, wgt = _f32(1, 8, 8, 6), _f32(3, 3, 6, 8)   # C=6 not divisible by 4
+    with pytest.raises(AssertionError):
+        conv2d_ws(x, wgt, interpret=True)
+
+
+@pytest.mark.parametrize("c,k", [(4, 4), (8, 8), (16, 4)])
+def test_int8_exact(c, k):
+    x, wgt = _i8(1, 10, 10, c), _i8(3, 3, c, k)
+    b = jnp.asarray(RNG.integers(-1000, 1000, size=(k,)), jnp.int32)
+    got = ops.conv2d(x, wgt, b)
+    want = ref.conv2d_ref_int8(x, wgt, b)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(got, want)
+
+
+def test_wrap8_bit_faithful():
+    """The Fig. 6 waveform mode: psums wrap in 8 bits."""
+    x, wgt = _i8(1, 8, 8, 8), _i8(3, 3, 8, 4)
+    got = ops.conv2d(x, wgt, wrap8=True)
+    want = ref.conv2d_ref_wrap8(x, wgt)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bias_preload_equals_post_add():
+    """M5: preloading bias into the accumulator == adding bias after."""
+    x, wgt, b = _f32(1, 10, 10, 4), _f32(3, 3, 4, 4), _f32(4)
+    with_bias = ops.conv2d(x, wgt, b)
+    without = ops.conv2d(x, wgt, None)
+    np.testing.assert_allclose(with_bias, without + b, rtol=1e-5, atol=1e-5)
+
+
+def test_requantized_output():
+    x, wgt = _i8(1, 8, 8, 4), _i8(3, 3, 4, 4)
+    scale = jnp.float32(1e-3)
+    got = ops.conv2d(x, wgt, out_scale=scale)
+    assert got.dtype == jnp.int8
+    acc = ref.conv2d_ref_int8(x, wgt)
+    want = jnp.clip(jnp.round(acc.astype(jnp.float32) * scale),
+                    -128, 127).astype(jnp.int8)
+    np.testing.assert_array_equal(got, want)

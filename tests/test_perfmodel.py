@@ -1,0 +1,51 @@
+"""The paper's §5.2 numbers, reproduced exactly (the reproduction contract)."""
+
+import pytest
+
+from repro.core import perfmodel
+
+
+def test_psum_count_matches_paper():
+    # [224x224x8] ⊛ [8x3x3x8] → "the system needs to compute 3,154,176 psum
+    # values" (= 222·222·8·8)
+    assert perfmodel.psum_count(224, 224, 8, 8) == 3_154_176
+
+
+def test_seconds_matches_paper():
+    n = perfmodel.psum_count(224, 224, 8, 8)
+    # "the theory time needed for computing this sample, which is 0.01408 s"
+    assert perfmodel.seconds(n) == pytest.approx(0.01408, rel=1e-3)
+
+
+def test_gops_single_ip_core():
+    n = perfmodel.psum_count(224, 224, 8, 8)
+    # "the throughput of a single core is 0.224 GOPS"
+    assert perfmodel.gops_paper(n) == pytest.approx(0.224, rel=1e-3)
+
+
+def test_gops_twenty_cores():
+    n = perfmodel.psum_count(224, 224, 8, 8)
+    cfg = perfmodel.IPCoreConfig(ip_cores=20)
+    # "when 20 cores are deployed ... up to 4.48 GOPS"
+    assert perfmodel.gops_paper(n, cfg) == pytest.approx(4.48, rel=1e-2)
+
+
+def test_macs_accounting():
+    n = perfmodel.psum_count(224, 224, 8, 8)
+    # 1 psum = 9 MACs = 18 ops → 0.224 × 18 = 4.032 standard GOPS
+    assert perfmodel.gops_macs(n) == pytest.approx(0.224 * 18, rel=1e-3)
+
+
+def test_16_psums_per_8_cycles():
+    cfg = perfmodel.IPCoreConfig()
+    assert perfmodel.cycles(16, cfg) == 8
+    assert perfmodel.cycles(17, cfg) == 16  # next batch
+
+
+def test_tpu_roofline_sane():
+    r = perfmodel.tpu_conv_roofline(224, 224, 8, 8)
+    assert r["seconds"] > 0
+    # the paper layer is tiny: a single v5e core is memory-bound on it
+    assert r["t_memory"] > r["t_compute"]
+    # and still orders of magnitude faster than the FPGA
+    assert r["gops_paper"] > 0.224 * 10

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.banking import plan_banks
+from repro.core.quantize import quantize_symmetric
+from repro.core.perfmodel import IPCoreConfig, cycles, psum_count
+from repro.kernels import ref
+from repro.kernels.conv2d_ws import conv2d_ws
+from repro.kernels.matmul_ws import matmul_ws
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def conv_case(draw):
+    h = draw(st.integers(5, 12))
+    w = draw(st.integers(5, 12))
+    c = draw(st.sampled_from([4, 8]))
+    k = draw(st.sampled_from([4, 8]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return h, w, c, k, seed
+
+
+@given(conv_case())
+@settings(**SETTINGS)
+def test_conv_matches_oracle_property(case):
+    h, w, c, k, seed = case
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(3, 3, c, k)), jnp.float32)
+    got = conv2d_ws(x, wt, interpret=True)
+    want = ref.conv2d_ref(x, wt)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_conv_linearity(seed):
+    """conv(a·x + b·y) == a·conv(x) + b·conv(y) — Eq. (1) is linear."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 4)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(1, 8, 8, 4)), jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(3, 3, 4, 4)), jnp.float32)
+    a, b = 1.7, -0.3
+    lhs = conv2d_ws(a * x + b * y, wt, interpret=True)
+    rhs = a * conv2d_ws(x, wt, interpret=True) \
+        + b * conv2d_ws(y, wt, interpret=True)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_conv_translation_equivariance(seed):
+    """Shifting the input shifts the output (valid-region comparison)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 10, 10, 4)), jnp.float32)
+    wt = jnp.asarray(rng.normal(size=(3, 3, 4, 4)), jnp.float32)
+    full = conv2d_ws(x, wt, interpret=True)
+    shifted = conv2d_ws(x[:, 1:, 1:], wt, interpret=True)
+    np.testing.assert_allclose(full[:, 1:, 1:], shifted, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 5000000), st.integers(1, 20))
+@settings(**SETTINGS)
+def test_perfmodel_cycle_monotonicity(n, ip_cores):
+    cfg1 = IPCoreConfig(ip_cores=ip_cores)
+    assert cycles(n, cfg1) >= cycles(max(n - 1, 1), cfg1)
+    # more IP cores never increases latency
+    assert cycles(n, IPCoreConfig(ip_cores=ip_cores + 1)) <= cycles(n, cfg1)
+
+
+@given(st.integers(4, 64).filter(lambda v: v % 4 == 0),
+       st.integers(4, 64).filter(lambda v: v % 4 == 0))
+@settings(**SETTINGS)
+def test_bank_plan_always_fits_or_maximally_split(c, k):
+    plan = plan_banks(64, 64, c, k)
+    assert plan.fits_vmem or (c // plan.cin_banks == 1
+                              and k // plan.kout_banks == 1)
+    assert c % plan.cin_banks == 0 and k % plan.kout_banks == 0
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_quantize_bounds_property(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
+    q = quantize_symmetric(x)
+    assert int(jnp.max(jnp.abs(q.values.astype(jnp.int32)))) <= 127
+    assert float(jnp.max(jnp.abs(q.dequantize() - x))) <= float(q.scale) / 2 + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_matmul_ws_associative_banking(seed):
+    """Splitting the contraction dimension into banks never changes the
+    result beyond float tolerance (the paper's channel banking, M1)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    a = matmul_ws(x, w, bk=64, interpret=True)   # single bank
+    b = matmul_ws(x, w, bk=16, interpret=True)   # four banks
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)

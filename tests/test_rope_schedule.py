@@ -1,0 +1,63 @@
+"""RoPE invariants + LR schedule behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.layers.rope import apply_rope, sinusoidal_positions
+from repro.optim.schedule import warmup_cosine
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = apply_rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """⟨rope(q,p1), rope(k,p2)⟩ depends only on p1-p2 (the point of RoPE)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(p1, p2):
+        qr = apply_rope(q, jnp.full((1, 1), p1), 10_000.0)
+        kr = apply_rope(k, jnp.full((1, 1), p2), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(100, 80), dot_at(40, 20), rtol=1e-4)
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 1, 2, 16)), jnp.float32)
+    y = apply_rope(x, jnp.zeros((1, 1), jnp.int32), 10_000.0)
+    np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+
+def test_sinusoidal_shape_and_range():
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    table = sinusoidal_positions(pos, 64)
+    assert table.shape == (2, 16, 64)
+    assert float(jnp.max(jnp.abs(table))) <= 1.0 + 1e-6
+
+
+def test_warmup_cosine_shape():
+    lr0 = float(warmup_cosine(0, peak_lr=1e-3, warmup_steps=10,
+                              total_steps=100))
+    lr_peak = float(warmup_cosine(9, peak_lr=1e-3, warmup_steps=10,
+                                  total_steps=100))
+    lr_end = float(warmup_cosine(99, peak_lr=1e-3, warmup_steps=10,
+                                 total_steps=100))
+    assert 0 < lr0 < lr_peak          # first step non-zero (step+1 conv.)
+    assert abs(lr_peak - 1e-3) < 1e-9
+    assert lr_end < 0.2 * 1e-3        # decays toward final_frac
+    # monotone decay after warmup
+    lrs = [float(warmup_cosine(s, peak_lr=1e-3, warmup_steps=10,
+                               total_steps=100)) for s in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))

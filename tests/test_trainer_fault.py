@@ -1,0 +1,79 @@
+"""Fault tolerance: an injected mid-run failure must recover from the last
+checkpoint and produce a loss trajectory IDENTICAL to an uninterrupted run.
+Plus straggler detection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduce_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.layers.common import materialize
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import init_state_specs, make_train_step
+from repro.train.trainer import (StragglerMonitor, Trainer, TrainerConfig)
+
+
+def _setup(tmp_path, fail_at=(), total=12):
+    cfg = reduce_config(get_config("llama3p2_3b"))
+    sspecs = init_state_specs(cfg)
+    state = {
+        "params": materialize(sspecs["params"], jax.random.PRNGKey(0)),
+        "opt": materialize(sspecs["opt"], jax.random.PRNGKey(1)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=total)))
+    pipe = make_pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                    global_batch=4, seed=0))
+    tc = TrainerConfig(total_steps=total, checkpoint_every=4,
+                       checkpoint_dir=str(tmp_path), log_every=0,
+                       fail_at_steps=tuple(fail_at),
+                       async_checkpoint=False)
+    return Trainer(tc, step_fn, pipe, state)
+
+
+def test_loss_decreases(tmp_path):
+    tr = _setup(tmp_path / "a", total=12)
+    hist = tr.run()
+    losses = [h["loss"] for h in hist]
+    assert losses[-1] < losses[0], losses
+
+
+def test_resume_equals_uninterrupted(tmp_path):
+    clean = _setup(tmp_path / "clean", total=12)
+    clean_hist = clean.run()
+
+    faulty = _setup(tmp_path / "faulty", fail_at=(6, 9), total=12)
+    faulty_hist = faulty.run()
+    assert faulty.restarts == 2
+
+    clean_by_step = {h["step"]: h["loss"] for h in clean_hist}
+    # after recovery some steps are REPLAYED; the final trajectory must
+    # match the clean run exactly at every step (bitwise determinism)
+    last = {h["step"]: h["loss"] for h in faulty_hist}
+    for step, loss in last.items():
+        np.testing.assert_allclose(loss, clean_by_step[step], rtol=0,
+                                   atol=0.0, err_msg=f"step {step}")
+
+
+def test_failure_before_first_checkpoint_is_fatal(tmp_path):
+    tr = _setup(tmp_path / "x", fail_at=(0,), total=4)
+    # step-0 checkpoint exists by design, so failure at 0 recovers; make the
+    # checkpoint directory read-only instead is platform-dependent — assert
+    # recovery works (the step-0 snapshot is the guarantee).
+    hist = tr.run()
+    assert tr.restarts == 1
+    assert len(hist) >= 4
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(factor=2.0, warmup=2)
+    for step in range(6):
+        assert not m.observe(step, 0.10)
+    assert m.observe(6, 0.5)        # 5× the EMA → straggler
+    assert len(m.events) == 1
+    assert m.events[0]["step"] == 6
+    # EMA clipping: a single outlier must not poison the baseline
+    assert m.ema < 0.2
