@@ -1,0 +1,69 @@
+"""Whole-network benchmark: LeNet / VGG-small int8 NetworkPlans through the
+Pallas backend (interpret on CPU — functional timing reference), with the
+§5.2 cycle model's whole-network prediction alongside the measurement.
+
+Emits ``BENCH_network.json`` so the perf trajectory of the network executor
+is tracked across PRs: per-network images/s, layers/s, measured µs/batch,
+and the model-predicted FPGA times (1 IP core and the 20-core full board).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.core import network
+from repro.core.convcore import ConvCoreConfig
+
+BATCH = 4
+OUT_PATH = os.environ.get("BENCH_NETWORK_JSON", "BENCH_network.json")
+
+
+def _bench_plan(plan: network.NetworkPlan, rng) -> dict:
+    params = plan.init_params(rng)
+    x = jnp.asarray(
+        rng.normal(size=(BATCH, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))
+    us = time_fn(lambda: program(x), iters=3, warmup=1)
+
+    n_layers = len(plan.layers)
+    rep = plan.perf_report()
+    fb = rep["full_board"]
+    images_s = BATCH / (us * 1e-6)
+    layers_s = BATCH * n_layers / (us * 1e-6)
+    emit(f"network/{plan.name}", us,
+         f"images_s={images_s:.1f};layers_s={layers_s:.1f};"
+         f"model_ms={rep['seconds']*1e3:.3f};"
+         f"model_ms_20core={fb['seconds']*1e3:.3f}")
+    return {
+        "name": plan.name,
+        "batch": BATCH,
+        "layers": n_layers,
+        "measured_us_per_batch": us,
+        "images_per_s": images_s,
+        "layers_per_s": layers_s,
+        "model_psums": rep["psums"],
+        "model_seconds_1core": rep["seconds"],
+        "model_gops_1core": rep["gops_paper"],
+        "model_seconds_20core": fb["seconds"],
+        "model_gops_20core": fb["gops_paper"],
+    }
+
+
+def run():
+    rng = np.random.default_rng(3)
+    results = [_bench_plan(network.lenet(), rng),
+               _bench_plan(network.vgg_small(), rng)]
+    payload = {"backend": jax.default_backend(),
+               "interpret": jax.default_backend() != "tpu",
+               "networks": results}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("network/json", 0.0, f"path={OUT_PATH}")

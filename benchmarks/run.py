@@ -4,6 +4,8 @@ microbenches.  Prints ``name,us_per_call,derived`` CSV.
   paper_table1     — §5.2 throughput reproduction (0.224 / 4.48 GOPS) +
                      Table 1 context + the TPU-adapted roofline comparison
   kernel_bench     — conv2d_ws banking sweep, int8 datapath, WS-GEMM blocks
+  network_bench    — whole-network int8 executor (LeNet/VGG-small) vs the
+                     §5.2 model's network prediction → BENCH_network.json
   attention_bench  — chunked-flash vs dense
   moe_bench        — EP dispatch statistics (drop rates, capacity)
   roofline_table   — the dry-run matrix (TPU numbers; see EXPERIMENTS.md)
@@ -17,11 +19,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import (attention_bench, kernel_bench, moe_bench,
-                            paper_table1, roofline_table)
+                            network_bench, paper_table1, roofline_table)
     print("name,us_per_call,derived")
     suites = [
         ("paper_table1", paper_table1.run),
         ("kernel_bench", kernel_bench.run),
+        ("network_bench", network_bench.run),
         ("attention_bench", attention_bench.run),
         ("moe_bench", moe_bench.run),
         ("roofline_table", roofline_table.run),

@@ -1,7 +1,19 @@
 """The paper end-to-end: the §5.2 workload ([224×224×8] ⊛ [8×3×3×8])
 through the ConvCore IP abstraction — float oracle, quantized int8
 datapath, banked Pallas kernel, and the cycle-accurate performance model
-reproducing the paper's 0.224 / 4.48 GOPS numbers.
+reproducing the paper's 0.224 / 4.48 GOPS numbers — then the network
+executor: a LeNet-style int8 ``NetworkPlan`` compiled into one jitted
+multi-layer program and scheduled over replicated (virtual) IP cores.
+
+Paper → TPU mapping of the network path:
+* one FPGA IP core processing "a convolutional layer at a time"  ↔  one
+  jitted layer pass of the conv2d_ws kernel (fused ReLU/pool/requant
+  epilogue = the FPGA post-processing before writeback);
+* the host sequencing layer passes through the output BRAMs  ↔  the
+  compiled NetworkPlan program chaining int8 feature maps in HBM;
+* ~20 replicated IP cores on the full board  ↔  batch sharding across
+  devices (or vmapped virtual cores) / kernel-set (kout) sharding —
+  core/scheduler.py.
 
     PYTHONPATH=src python examples/conv_acceleration.py
 """
@@ -12,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ConvCore, ConvCoreConfig, paper_workload
+from repro.core import ConvCore, ConvCoreConfig, network, paper_workload, scheduler
 from repro.core.banking import plan_banks
 from repro.core.perfmodel import (IPCoreConfig, gops_macs, gops_paper,
                                   psum_count, seconds, tpu_conv_roofline)
@@ -62,6 +74,44 @@ def main():
     print(f"bound: {'memory' if r['t_memory'] > r['t_compute'] else 'compute'}"
           f"  time {r['seconds']*1e6:.2f} µs  {r['gops_paper']:.0f} GOPS-paper"
           f"  ({seconds(n)/r['seconds']:.0f}× the FPGA IP core)")
+
+    # --- the network executor: LeNet-style int8 NetworkPlan ----------------
+    rng = np.random.default_rng(7)
+    plan_net = network.lenet()
+    print(f"\n=== network executor: {plan_net.name} "
+          f"{plan_net.input_shape} → {plan_net.activation_shapes()[-1]}")
+    params = plan_net.init_params(rng)
+    imgs = jnp.asarray(rng.normal(size=(8, 28, 28, 1)), jnp.float32)
+    want = plan_net.apply_ref(params, imgs)
+
+    qnet = network.quantize_network(plan_net, params, imgs)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))
+    t0 = time.time()
+    logits = jax.block_until_ready(program(imgs))
+    rel = float(jnp.linalg.norm(logits - want) / jnp.linalg.norm(want))
+    print(f"int8 network ({len(plan_net.layers)} layers, all inter-layer "
+          f"maps int8): {time.time()-t0:.2f}s, rel err vs float {rel:.4f}")
+
+    # replicated IP cores: batch-sharded virtual cores (one per image pair)
+    sched = scheduler.MultiCoreScheduler(scheduler.SchedulerConfig(n_cores=4))
+    logits_mc = sched.run(program, imgs)
+    print(f"4 virtual IP cores (batch-sharded): max|Δ| = "
+          f"{float(jnp.max(jnp.abs(logits_mc - logits))):.1f} (exact)")
+
+    # the §5.2 model summed over the whole network, incl. the full board
+    rep = plan_net.perf_report()
+    print(f"\nwhole-network cycle model ({plan_net.name}):")
+    for row in rep["layers"]:
+        if row["psums"]:
+            print(f"  {row['name']:<10} {row['psums']:>10,} psums  "
+                  f"{row['cycles']:>8,} cycles")
+    print(f"  total      {rep['psums']:>10,} psums  {rep['cycles']:>8,} "
+          f"cycles = {rep['seconds']*1e3:.3f} ms @112MHz "
+          f"({rep['gops_paper']:.3f} GOPS-paper)")
+    fb = rep["full_board"]
+    print(f"  full board ({fb['ip_cores']} IP cores): "
+          f"{fb['seconds']*1e3:.3f} ms ({fb['gops_paper']:.2f} GOPS-paper)")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,26 @@
 """The paper's primary contribution: the convolution IP-core architecture
 (channel banking × multi-kernel weight-stationary dataflow × load/compute
-pipelining × bias preload × 8-bit datapath), adapted to TPU.
+pipelining × bias preload × 8-bit datapath), adapted to TPU and scaled
+from one layer to whole networks.
 
-* ConvCore / ConvCoreConfig   — the layer-at-a-time IP core (paper §3–4)
-* perfmodel                   — the paper's §5.2 cycle/GOPS model, exact
-* banking                     — BRAM↔VMEM bank planning (§4.1)
+* ConvCore / ConvCoreConfig   — the layer-at-a-time IP core (paper §3–4);
+                                Backend protocol + registry for dispatch
+* network                     — LayerSpec/NetworkPlan graphs compiled into
+                                jitted multi-layer int8 programs
+* scheduler                   — the replicated-IP-core mode (batch / kout
+                                sharding over devices or virtual cores)
+* perfmodel                   — the paper's §5.2 cycle/GOPS model, exact,
+                                extended to whole-network estimates
+* banking                     — BRAM↔VMEM bank planning (§4.1),
+                                stride/padding-aware
 * quantize                    — the 8-bit datapath as reusable substrate
 """
 
-from repro.core.convcore import ConvCore, ConvCoreConfig, paper_workload
-from repro.core import banking, perfmodel, quantize
+from repro.core.convcore import (Backend, ConvCore, ConvCoreConfig,
+                                 get_backend, paper_workload,
+                                 register_backend)
+from repro.core import banking, network, perfmodel, quantize, scheduler
 
-__all__ = ["ConvCore", "ConvCoreConfig", "paper_workload", "banking",
-           "perfmodel", "quantize"]
+__all__ = ["Backend", "ConvCore", "ConvCoreConfig", "get_backend",
+           "paper_workload", "register_backend", "banking", "network",
+           "perfmodel", "quantize", "scheduler"]

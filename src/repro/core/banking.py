@@ -2,15 +2,22 @@
 
 The paper stores one quarter of the channels per BRAM (4 image BMGs) and a
 4×4 grid of kernel BMGs.  On TPU the analogous resource is VMEM: a grid
-step's working set is (image block + weight block + output block) × 2 for
-the double-buffered pipeline; this module sizes bank counts so the working
-set fits the per-core VMEM budget, and enforces the paper's
-divisible-by-4 invariant.
+step's working set is (padded image block + weight block + accumulator +
+epilogue output block) × pipeline double-buffering; this module sizes bank
+counts so the working set fits the per-core VMEM budget, and enforces the
+paper's divisible-by-4 invariant.
+
+Stride / padding awareness: the image block is the *padded* map (the FPGA
+writes zero margins into the image BRAMs) and the accumulator block is the
+*strided* conv output, so plans stay correct for SAME / stride-2 / pooled
+layers.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+from repro.kernels.ref import conv_out_shape, normalize_padding
 
 VMEM_BYTES_V5E = 128 * 1024 * 1024   # ~128 MiB per TensorCore
 
@@ -22,6 +29,9 @@ class BankPlan:
     image_block_bytes: int
     weight_block_bytes: int
     output_block_bytes: int
+    stride: int = 1
+    out_h: int = 0                    # conv output (pre-pool) spatial shape
+    out_w: int = 0
 
     @property
     def working_set_bytes(self) -> int:
@@ -37,19 +47,23 @@ class BankPlan:
 def plan_banks(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
                in_bytes: int = 1, acc_bytes: int = 4,
                cin_banks: int = 4, kout_banks: int = 4,
+               stride: int = 1, padding="VALID",
                vmem_budget: int = VMEM_BYTES_V5E) -> BankPlan:
     """Start from the paper's 4×4 banking; double bank counts until the
     working set fits VMEM (each doubling halves the per-bank block)."""
     assert c % cin_banks == 0 and k % kout_banks == 0, (
         "divisible-by-4 invariant (paper §4.1)")
-    oh, ow = h - kh + 1, w - kw + 1
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h, w)
+    hp, wp = h + pt + pb, w + pl_ + pr
+    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
     while True:
         cb, kb = c // cin_banks, k // kout_banks
         plan = BankPlan(
             cin_banks=cin_banks, kout_banks=kout_banks,
-            image_block_bytes=h * w * cb * in_bytes,
+            image_block_bytes=hp * wp * cb * in_bytes,
             weight_block_bytes=kh * kw * cb * kb * in_bytes,
             output_block_bytes=oh * ow * kb * acc_bytes,
+            stride=stride, out_h=oh, out_w=ow,
         )
         if plan.fits_vmem or (cb == 1 and kb == 1):
             return plan
@@ -62,3 +76,13 @@ def plan_banks(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
             cin_banks *= 2
         else:
             return plan
+
+
+def divisor_banks(dim: int, want: int) -> int:
+    """Largest bank count ≤ ``want`` that divides ``dim`` — how the paper's
+    divisible-by-4 invariant degrades for awkward channel counts (e.g. the
+    C=1 input layer of a grayscale network runs on a single image BMG)."""
+    b = max(1, min(want, dim))
+    while dim % b:
+        b -= 1
+    return b

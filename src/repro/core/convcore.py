@@ -3,24 +3,30 @@
 Semantics follow the paper exactly (§3–4): the core processes **one
 convolutional layer at a time**; it accepts a C-channel feature-map stack and
 K C-channel kernels, and produces a K-channel feature map.  Bias is
-*preloaded* into the output accumulator (M5).  C and K must satisfy the
-divisible-by-4 banking invariant (§4.1) for the faithful (4,4)
-configuration; bank counts are parameterizable for TPU block-size tuning
-(banking.py picks VMEM-fitting counts).
+*preloaded* into the output accumulator (M5).  Generalized beyond the
+paper's stride-1 VALID demo: any stride, SAME/VALID/explicit padding, and
+the fused post-processing epilogue (ReLU → 2×2 max-pool → requantize)
+executed before writeback.  Bank counts degrade gracefully for channel
+counts that break the divisible-by-4 invariant (a C=1 grayscale input
+layer runs on one image BMG).
 
-Backends:
+Backends implement the ``Backend`` protocol and live in a registry, so
+``apply_layer`` is a pure dispatch (no per-dtype if/else ladder):
+
 * "pallas"  — kernels/conv2d_ws.py, the TPU-native dataflow (interpret mode
   on CPU);
 * "ref"     — pure-jnp oracle (lax.conv), used for training graphs/vjp.
 
 The int8 path mirrors the paper's 8-bit datapath: int8 features/weights →
 int32 psum accumulation → requantize (or wrap8 for waveform fidelity).
+Layer-at-a-time networks are built on top by core/network.py; replicated
+IP cores map to core/scheduler.py.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Dict, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +36,90 @@ from repro.core.quantize import Quantized, quantize_symmetric
 from repro.kernels import ops, ref
 
 
+class Backend(Protocol):
+    """One implementation of the IP-core ops (conv + the dense GEMM)."""
+
+    name: str
+
+    def conv(self, x: jax.Array, w: jax.Array,
+             bias: Optional[jax.Array] = None, *, stride: int = 1,
+             padding="VALID", relu: bool = False, pool: bool = False,
+             out_scale=None, wrap8: bool = False,
+             plan: Optional[banking.BankPlan] = None) -> jax.Array:
+        ...
+
+    def matmul(self, x: jax.Array, w: jax.Array,
+               bias: Optional[jax.Array] = None) -> jax.Array:
+        ...
+
+
+class RefBackend:
+    """Pure-jnp oracle (lax.conv) — differentiable, the correctness
+    contract for the Pallas dataflow."""
+
+    name = "ref"
+
+    def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
+             relu=False, pool=False, out_scale=None, wrap8=False,
+             plan=None):
+        if wrap8:
+            # epilogue runs on the int32 accumulator, THEN the result wraps
+            # to 8 bits — matching the Pallas path (epilogue in the kernel,
+            # wrap in ops.conv2d)
+            assert x.dtype == jnp.int8
+            acc = ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
+                                          padding=padding, relu=relu,
+                                          pool=pool)
+            return acc.astype(jnp.int8)
+        return ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
+                                       padding=padding, relu=relu,
+                                       pool=pool, out_scale=out_scale)
+
+    def matmul(self, x, w, bias=None):
+        if x.dtype == jnp.int8:
+            return ref.matmul_ref_int8(x, w, bias)
+        return ref.matmul_ref(x, w, bias)
+
+
+class PallasBackend:
+    """The TPU-native weight-stationary dataflow (kernels/conv2d_ws.py)."""
+
+    name = "pallas"
+
+    def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
+             relu=False, pool=False, out_scale=None, wrap8=False,
+             plan=None):
+        cin_banks = plan.cin_banks if plan else 4
+        kout_banks = plan.kout_banks if plan else 4
+        return ops.conv2d(x, w, bias, stride=stride, padding=padding,
+                          cin_banks=cin_banks, kout_banks=kout_banks,
+                          relu=relu, pool=pool, wrap8=wrap8,
+                          out_scale=out_scale)
+
+    def matmul(self, x, w, bias=None):
+        return ops.matmul_ws(x, w, bias)
+
+
+BACKENDS: Dict[str, Backend] = {"ref": RefBackend(), "pallas": PallasBackend()}
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; have {sorted(BACKENDS)}") from None
+
+
+def register_backend(backend: Backend) -> None:
+    BACKENDS[backend.name] = backend
+
+
 @dataclass(frozen=True)
 class ConvCoreConfig:
     cin_banks: int = 4            # paper: 4 image BMGs / computing cores (M1)
     kout_banks: int = 4           # paper: 4 PCOREs per core (M2)
-    backend: str = "pallas"       # pallas | ref
+    backend: str = "pallas"       # a BACKENDS registry key
     int8: bool = False            # the paper's 8-bit datapath
     wrap8: bool = False           # bit-faithful 8-bit psum wrap (Fig. 6)
     auto_bank: bool = False       # let banking.py grow banks to fit VMEM
@@ -46,47 +131,51 @@ class ConvCore:
     def __init__(self, config: ConvCoreConfig = ConvCoreConfig()):
         self.config = config
 
-    def plan(self, x_shape, w_shape) -> banking.BankPlan:
+    def plan(self, x_shape, w_shape, stride: int = 1,
+             padding="VALID") -> banking.BankPlan:
         n, h, w_, c = x_shape
         kh, kw, _, k = w_shape
         cfg = self.config
         in_bytes = 1 if cfg.int8 else 4
+        # degrade bank counts to the largest divisor (C=1 input layers etc.)
+        cb_n = banking.divisor_banks(c, cfg.cin_banks)
+        kb_n = banking.divisor_banks(k, cfg.kout_banks)
         if cfg.auto_bank:
             return banking.plan_banks(h, w_, c, k, kh, kw, in_bytes=in_bytes,
-                                      cin_banks=cfg.cin_banks,
-                                      kout_banks=cfg.kout_banks)
-        cb, kb = c // cfg.cin_banks, k // cfg.kout_banks
-        oh, ow = h - kh + 1, w_ - kw + 1
-        return banking.BankPlan(cfg.cin_banks, cfg.kout_banks,
-                                h * w_ * cb * in_bytes,
+                                      cin_banks=cb_n, kout_banks=kb_n,
+                                      stride=stride, padding=padding)
+        (pt, pb), (pl_, pr) = ref.normalize_padding(padding, kh, kw,
+                                                    stride, h, w_)
+        oh, ow = ref.conv_out_shape(h, w_, kh, kw, stride, padding)
+        cb, kb = c // cb_n, k // kb_n
+        return banking.BankPlan(cb_n, kb_n,
+                                (h + pt + pb) * (w_ + pl_ + pr) * cb * in_bytes,
                                 kh * kw * cb * kb * in_bytes,
-                                oh * ow * kb * 4)
+                                oh * ow * kb * 4,
+                                stride=stride, out_h=oh, out_w=ow)
 
     def apply_layer(self, x: jax.Array, w: jax.Array,
                     bias: Optional[jax.Array] = None,
-                    out_scale: Optional[jax.Array] = None) -> jax.Array:
-        """x: [N,H,W,C] ⊛ w: [KH,KW,C,K] (+bias [K]) → [N,OH,OW,K]."""
+                    out_scale: Optional[jax.Array] = None, *,
+                    stride: int = 1, padding="VALID", relu: bool = False,
+                    pool: bool = False) -> jax.Array:
+        """x: [N,H,W,C] ⊛ w: [KH,KW,C,K] (+bias [K]) → [N,OH,OW,K].
+
+        Fused epilogue order: ReLU → 2×2 max-pool → requantize(out_scale).
+        """
         cfg = self.config
-        plan = self.plan(x.shape, w.shape)
+        plan = self.plan(x.shape, w.shape, stride, padding)
         if cfg.int8:
             assert x.dtype == jnp.int8 and w.dtype == jnp.int8
-        if cfg.backend == "ref":
-            if cfg.int8:
-                out = ref.conv2d_ref_int8(x, w, bias)
-                if cfg.wrap8:
-                    return out.astype(jnp.int8)
-                if out_scale is not None:
-                    return jnp.clip(jnp.round(
-                        out.astype(jnp.float32) * out_scale),
-                        -128, 127).astype(jnp.int8)
-                return out
-            return ref.conv2d_ref(x, w, bias)
-        return ops.conv2d(x, w, bias, cin_banks=plan.cin_banks,
-                          kout_banks=plan.kout_banks,
-                          wrap8=cfg.wrap8, out_scale=out_scale)
+        backend = get_backend(cfg.backend)
+        return backend.conv(x, w, bias, stride=stride, padding=padding,
+                            relu=relu, pool=pool, out_scale=out_scale,
+                            wrap8=cfg.wrap8, plan=plan)
 
     def apply_quantized_layer(self, x_f32: jax.Array, w_f32: jax.Array,
-                              bias_f32: Optional[jax.Array] = None):
+                              bias_f32: Optional[jax.Array] = None, *,
+                              stride: int = 1, padding="VALID",
+                              relu: bool = False, pool: bool = False):
         """Float-in/float-out convenience: symmetric int8 quantization of
         activations + weights, int32 accumulate, dequantize (the edge-AI
         deployment path the paper targets)."""
@@ -101,7 +190,9 @@ class ConvCore:
             cin_banks=self.config.cin_banks,
             kout_banks=self.config.kout_banks,
             backend=self.config.backend, int8=True))
-        acc = core.apply_layer(xq.values, wq.values, bias_i32)
+        acc = core.apply_layer(xq.values, wq.values, bias_i32,
+                               stride=stride, padding=padding, relu=relu,
+                               pool=pool)
         return acc.astype(jnp.float32) * (xq.scale * wq.scale)
 
 

@@ -1,0 +1,357 @@
+"""Network-level executor: whole CNNs through the layer-at-a-time IP core.
+
+The paper's IP core "can process a convolutional layer at a time" (§4.2);
+running a network on the FPGA means the host sequences layer passes, with
+the output BRAMs of one pass becoming the image BRAMs of the next.  This
+module is that sequencer as a compiler: a ``NetworkPlan`` (a straight-line
+graph of conv / pool / flatten / dense ``LayerSpec``s) is turned into one
+jitted multi-layer program over a ``Backend`` (core/convcore.py).
+
+Layer-to-layer int8 chaining (the production path): ``quantize_network``
+calibrates per-layer activation scales from a float forward pass, quantizes
+weights/biases, and computes the *requantization scale* of each layer
+(``s_in·s_w / s_out`` — core/quantize.requant_scale).  The compiled int8
+program then keeps every inter-layer feature map in int8: the fused kernel
+epilogue (ReLU → pool → requantize) writes the next layer's int8 input
+directly, so nothing round-trips HBM in int32 — the FPGA post-processing
+idiom at network scale.
+
+Paper → TPU mapping of the replicated-IP-core mode (full-board 4.48 GOPS):
+core/scheduler.py shards a compiled program across devices (one IP core ↔
+one device) or vmapped virtual cores; core/perfmodel.network_report sums
+the §5.2 cycle model over the plan's layers, including the 20-core
+configuration.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import banking, perfmodel
+from repro.core.convcore import ConvCoreConfig, get_backend
+from repro.core.quantize import (act_scale_from_calibration, quantize_symmetric,
+                                 requant_scale)
+from repro.kernels import ref
+
+# ---------------------------------------------------------------------------
+# Layer graph
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a straight-line CNN.
+
+    kind: "conv" | "pool" | "flatten" | "dense".  ``pool=True`` on a conv
+    layer fuses the 2×2/2 max-pool into the kernel epilogue (one HBM
+    round-trip); a standalone "pool" layer is the unfused fallback."""
+    kind: str
+    features: int = 0                      # conv: K; dense: output dim
+    kernel: Tuple[int, int] = (3, 3)
+    stride: int = 1
+    padding: ref.Padding = "SAME"
+    relu: bool = False
+    pool: bool = False                     # conv only: fused 2×2 max-pool
+    size: int = 2                          # "pool" layers: window/stride
+
+
+def conv(features: int, kernel: int = 3, stride: int = 1,
+         padding: ref.Padding = "SAME", relu: bool = True,
+         pool: bool = False) -> LayerSpec:
+    return LayerSpec("conv", features=features, kernel=(kernel, kernel),
+                     stride=stride, padding=padding, relu=relu, pool=pool)
+
+
+def maxpool(size: int = 2) -> LayerSpec:
+    return LayerSpec("pool", size=size)
+
+
+def flatten() -> LayerSpec:
+    return LayerSpec("flatten")
+
+
+def dense(features: int, relu: bool = False) -> LayerSpec:
+    return LayerSpec("dense", features=features, relu=relu)
+
+
+@dataclass(frozen=True)
+class NetworkPlan:
+    """A straight-line CNN over [H, W, C] inputs."""
+    name: str
+    input_shape: Tuple[int, int, int]          # (H, W, C)
+    layers: Tuple[LayerSpec, ...]
+
+    def activation_shapes(self) -> List[Tuple[int, ...]]:
+        """Per-layer output shapes (without the batch dim)."""
+        h, w, c = self.input_shape
+        flat: Optional[int] = None
+        out: List[Tuple[int, ...]] = []
+        for sp in self.layers:
+            if sp.kind == "conv":
+                assert flat is None, "conv after flatten"
+                kh, kw = sp.kernel
+                h, w = ref.conv_out_shape(h, w, kh, kw, sp.stride,
+                                          sp.padding)
+                if sp.pool:
+                    h, w = h // 2, w // 2
+                c = sp.features
+                out.append((h, w, c))
+            elif sp.kind == "pool":
+                h, w = (h - sp.size) // sp.size + 1, \
+                       (w - sp.size) // sp.size + 1
+                out.append((h, w, c))
+            elif sp.kind == "flatten":
+                flat = h * w * c
+                out.append((flat,))
+            elif sp.kind == "dense":
+                assert flat is not None, "dense before flatten"
+                flat = sp.features
+                out.append((flat,))
+            else:
+                raise ValueError(f"unknown layer kind {sp.kind!r}")
+        return out
+
+    def param_shapes(self) -> List[Optional[dict]]:
+        """Per-layer {"w": ..., "b": ...} shapes (None for pool/flatten)."""
+        h, w, c = self.input_shape
+        shapes: List[Optional[dict]] = []
+        in_c: int = c
+        in_flat: Optional[int] = None
+        for sp, out in zip(self.layers, self.activation_shapes()):
+            if sp.kind == "conv":
+                kh, kw = sp.kernel
+                shapes.append({"w": (kh, kw, in_c, sp.features),
+                               "b": (sp.features,)})
+                in_c = sp.features
+            elif sp.kind == "dense":
+                shapes.append({"w": (in_flat, sp.features),
+                               "b": (sp.features,)})
+            else:
+                shapes.append(None)
+            in_flat = out[0] if len(out) == 1 else None
+        return shapes
+
+    def init_params(self, rng: np.random.Generator) -> List[Optional[dict]]:
+        """He-initialized float32 parameters."""
+        params: List[Optional[dict]] = []
+        for shp in self.param_shapes():
+            if shp is None:
+                params.append(None)
+                continue
+            fan_in = int(np.prod(shp["w"][:-1]))
+            std = math.sqrt(2.0 / fan_in)
+            params.append({
+                "w": jnp.asarray(rng.normal(size=shp["w"]) * std,
+                                 jnp.float32),
+                "b": jnp.asarray(rng.normal(size=shp["b"]) * 0.05,
+                                 jnp.float32)})
+        return params
+
+    def psum_table(self) -> List[Tuple[str, int]]:
+        """Per-layer psum counts in the paper's accounting (conv: output
+        pixels × kernels × input channels; dense: a 1×1-conv GEMM, in×out;
+        pool/flatten: free — the fused epilogue absorbs post-processing)."""
+        h, w, c = self.input_shape
+        flat: Optional[int] = None
+        rows: List[Tuple[str, int]] = []
+        for i, sp in enumerate(self.layers):
+            if sp.kind == "conv":
+                kh, kw = sp.kernel
+                rows.append((f"conv{i}", perfmodel.psum_count(
+                    h, w, c, sp.features, kh, kw, sp.stride, sp.padding)))
+                h, w = ref.conv_out_shape(h, w, kh, kw, sp.stride,
+                                          sp.padding)
+                if sp.pool:
+                    h, w = h // 2, w // 2
+                c = sp.features
+            elif sp.kind == "pool":
+                h, w = (h - sp.size) // sp.size + 1, \
+                       (w - sp.size) // sp.size + 1
+                rows.append((f"pool{i}", 0))
+            elif sp.kind == "flatten":
+                flat = h * w * c
+                rows.append((f"flatten{i}", 0))
+            elif sp.kind == "dense":
+                rows.append((f"dense{i}", flat * sp.features))
+                flat = sp.features
+        return rows
+
+    def perf_report(self, cfg: perfmodel.IPCoreConfig =
+                    perfmodel.IPCoreConfig()) -> dict:
+        """The §5.2 cycle model summed over the network, including the
+        20-core full-board configuration (perfmodel.network_report)."""
+        return perfmodel.network_report(self.psum_table(), cfg)
+
+    def forward_activations(self, params: Sequence[Optional[dict]],
+                            x: jax.Array):
+        """Yield (index, spec, layer_params, activation-after-layer)
+        through the float oracle — the single definition of layer
+        semantics, shared by ``apply_ref`` and ``quantize_network``."""
+        for i, (sp, p) in enumerate(zip(self.layers, params)):
+            if sp.kind == "conv":
+                x = ref.conv2d_epilogue_ref(
+                    x, p["w"], p["b"], stride=sp.stride, padding=sp.padding,
+                    relu=sp.relu, pool=sp.pool)
+            elif sp.kind == "pool":
+                x = ref.maxpool2d_ref(x, sp.size)
+            elif sp.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif sp.kind == "dense":
+                x = ref.matmul_ref(x, p["w"], p["b"])
+                if sp.relu:
+                    x = jnp.maximum(x, 0)
+            else:
+                raise ValueError(f"unknown layer kind {sp.kind!r}")
+            yield i, sp, p, x
+
+    def apply_ref(self, params: Sequence[Optional[dict]], x: jax.Array
+                  ) -> jax.Array:
+        """Float oracle forward pass (lax.conv; differentiable)."""
+        for _, _, _, x in self.forward_activations(params, x):
+            pass
+        return x
+
+
+# ---------------------------------------------------------------------------
+# int8 network quantization + compilation
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuantizedNetwork:
+    """A NetworkPlan lowered to the 8-bit datapath.
+
+    Per parametric layer i: int8 weights, int32 bias (at scale
+    ``s_in·s_w``), and the requantization scale putting the int32
+    accumulator on the NEXT layer's int8 grid.  The final parametric layer
+    keeps ``requant=None`` and the program dequantizes its accumulator with
+    ``out_dequant`` (logits want full precision)."""
+    plan: NetworkPlan
+    weights: Tuple[Optional[jax.Array], ...]       # int8
+    biases: Tuple[Optional[jax.Array], ...]        # int32
+    requants: Tuple[Optional[jax.Array], ...]      # f32 scalars
+    in_scale: jax.Array                            # input activation scale
+    out_dequant: jax.Array                         # final accumulator scale
+
+
+def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
+                     calib_x: jax.Array) -> QuantizedNetwork:
+    """Calibrate activation scales with a float forward pass and lower every
+    parametric layer to int8 (per-tensor symmetric weights)."""
+    last_param = max(i for i, sp in enumerate(plan.layers)
+                     if sp.kind in ("conv", "dense"))
+    s_act = act_scale_from_calibration(calib_x)
+    in_scale = s_act
+    weights: List[Optional[jax.Array]] = []
+    biases: List[Optional[jax.Array]] = []
+    requants: List[Optional[jax.Array]] = []
+    out_dequant = jnp.float32(1.0)
+    for i, sp, p, x in plan.forward_activations(params, calib_x):
+        if sp.kind not in ("conv", "dense"):
+            # pool/flatten are monotone/shape-only: the int8 scale carries
+            weights.append(None); biases.append(None); requants.append(None)
+            continue
+        wq = quantize_symmetric(p["w"])
+        acc_scale = s_act * wq.scale                  # int32 psum units
+        weights.append(wq.values)
+        biases.append(jnp.round(p["b"] / acc_scale).astype(jnp.int32))
+        if i == last_param:
+            requants.append(None)
+            out_dequant = acc_scale
+        else:
+            s_next = act_scale_from_calibration(x)
+            requants.append(requant_scale(s_act, wq.scale, s_next))
+            s_act = s_next
+    return QuantizedNetwork(plan, tuple(weights), tuple(biases),
+                            tuple(requants), in_scale, out_dequant)
+
+
+def make_int8_program(qnet: QuantizedNetwork,
+                      core_config: ConvCoreConfig = ConvCoreConfig(int8=True)):
+    """Compile the quantized network into one jitted program
+    x_f32 [N,H,W,C] → logits_f32 [N,classes].
+
+    Conv layers run through the backend with the FULL fused epilogue
+    (ReLU → pool → requantize in-VMEM); every inter-layer tensor is int8.
+    Dense accumulators requantize inline (the GEMM epilogue is a cheap
+    elementwise op XLA fuses into the kernel's consumer)."""
+    backend = get_backend(core_config.backend)
+    plan = qnet.plan
+
+    def bank(c: int, k: int) -> banking.BankPlan:
+        return banking.BankPlan(
+            banking.divisor_banks(c, core_config.cin_banks),
+            banking.divisor_banks(k, core_config.kout_banks), 0, 0, 0)
+
+    def program(x: jax.Array) -> jax.Array:
+        h = jnp.clip(jnp.round(x.astype(jnp.float32) / qnet.in_scale),
+                     -128, 127).astype(jnp.int8)
+        for sp, w, b, rq in zip(plan.layers, qnet.weights, qnet.biases,
+                                qnet.requants):
+            if sp.kind == "conv":
+                h = backend.conv(h, w, b, stride=sp.stride,
+                                 padding=sp.padding, relu=sp.relu,
+                                 pool=sp.pool, out_scale=rq,
+                                 plan=bank(h.shape[-1], w.shape[-1]))
+                if rq is None:                       # final conv: dequantize
+                    h = h.astype(jnp.float32) * qnet.out_dequant
+            elif sp.kind == "pool":
+                # max-pool commutes with the monotone int8 mapping
+                h = ref.maxpool2d_ref(h, sp.size)
+            elif sp.kind == "flatten":
+                h = h.reshape(h.shape[0], -1)
+            elif sp.kind == "dense":
+                acc = backend.matmul(h, w, b)        # int32
+                if sp.relu:
+                    acc = jnp.maximum(acc, 0)
+                if rq is None:
+                    h = acc.astype(jnp.float32) * qnet.out_dequant
+                else:
+                    h = ref.requantize_ref(acc, rq)
+        return h
+
+    return jax.jit(program)
+
+
+# ---------------------------------------------------------------------------
+# Reference network zoo
+# ---------------------------------------------------------------------------
+
+
+def lenet(input_shape: Tuple[int, int, int] = (28, 28, 1),
+          classes: int = 10) -> NetworkPlan:
+    """LeNet-style grayscale classifier exercising the full feature matrix:
+    SAME padding, fused conv+pool epilogues, a stride-2 conv, and int8
+    dense layers."""
+    return NetworkPlan(
+        name="lenet", input_shape=input_shape,
+        layers=(
+            conv(8, kernel=3, padding="SAME", relu=True, pool=True),
+            conv(16, kernel=3, padding="SAME", relu=True, pool=True),
+            conv(32, kernel=3, stride=2, padding="SAME", relu=True),
+            flatten(),
+            dense(64, relu=True),
+            dense(classes),
+        ))
+
+
+def vgg_small(input_shape: Tuple[int, int, int] = (32, 32, 4),
+              classes: int = 10) -> NetworkPlan:
+    """VGG-style stacked 3×3 blocks (conv-conv-pool), the shape class the
+    paper's full-board replication mode targets."""
+    return NetworkPlan(
+        name="vgg_small", input_shape=input_shape,
+        layers=(
+            conv(16, relu=True), conv(16, relu=True, pool=True),
+            conv(32, relu=True), conv(32, relu=True, pool=True),
+            conv(64, relu=True, pool=True),
+            flatten(),
+            dense(128, relu=True),
+            dense(classes),
+        ))

@@ -14,7 +14,10 @@ numbers are comparable with TPU rooflines (DESIGN.md §3).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import List, Sequence, Tuple
+
+from repro.kernels.ref import conv_out_shape
 
 
 @dataclass(frozen=True)
@@ -26,9 +29,11 @@ class IPCoreConfig:
     ip_cores: int = 1              # replicated IP cores on the fabric
 
 
-def psum_count(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3) -> int:
-    """One psum per (output pixel × kernel × input channel)."""
-    oh, ow = h - kh + 1, w - kw + 1
+def psum_count(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
+               stride: int = 1, padding="VALID") -> int:
+    """One psum per (output pixel × kernel × input channel); stride/padding
+    change only the output pixel count."""
+    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
     return oh * ow * k * c
 
 
@@ -64,6 +69,46 @@ def paper_reference_numbers():
         "gops_1core": gops_paper(n, one),
         "gops_20cores": gops_paper(n, twenty),
         "gops_macs_1core": gops_macs(n, cfg=one),
+    }
+
+
+def network_cycles(layer_psums: Sequence[int],
+                   cfg: IPCoreConfig = IPCoreConfig()) -> int:
+    """Whole-network cycle estimate: the IP core processes one layer at a
+    time (§4.2), so the network cost is the sum of per-layer passes (each
+    layer rounds up to full psum batches separately — the pipeline drains
+    between layer configurations)."""
+    return sum(cycles(p, cfg) for p in layer_psums if p)
+
+
+def network_report(layers: Sequence[Tuple[str, int]],
+                   cfg: IPCoreConfig = IPCoreConfig(),
+                   full_board_cores: int = 20) -> dict:
+    """Per-layer + total cycles/seconds/GOPS for a layer list
+    [(name, psums_per_image), ...], for ``cfg`` and for the paper's
+    full-board configuration (ip_cores=20, batch-sharded replication)."""
+    board = replace(cfg, ip_cores=full_board_cores)
+    per_layer: List[dict] = []
+    for name, p in layers:
+        per_layer.append({"name": name, "psums": p,
+                          "cycles": cycles(p, cfg) if p else 0})
+    total_psums = sum(p for _, p in layers)
+    total = network_cycles([p for _, p in layers], cfg)
+    total_board = network_cycles([p for _, p in layers], board)
+    return {
+        "layers": per_layer,
+        "psums": total_psums,
+        "cycles": total,
+        "seconds": total / cfg.clock_hz,
+        "gops_paper": total_psums / (total / cfg.clock_hz) / 1e9 if total
+        else 0.0,
+        "full_board": {
+            "ip_cores": full_board_cores,
+            "cycles": total_board,
+            "seconds": total_board / board.clock_hz,
+            "gops_paper": total_psums / (total_board / board.clock_hz) / 1e9
+            if total_board else 0.0,
+        },
     }
 
 

@@ -39,6 +39,21 @@ def quantize_symmetric(x: jax.Array, axis: Optional[int] = None) -> Quantized:
     return Quantized(q, scale)
 
 
+def requant_scale(in_scale, w_scale, out_scale) -> jax.Array:
+    """Per-layer int8 chaining scale: an int32 accumulator holds values in
+    units of ``in_scale·w_scale``; multiplying by ``in_scale·w_scale /
+    out_scale`` re-expresses them on the next layer's int8 grid, so
+    quantized layers chain without dequantizing (the FPGA requantization
+    stage between layer passes)."""
+    return jnp.asarray(in_scale * w_scale / out_scale, jnp.float32)
+
+
+def act_scale_from_calibration(x_f32: jax.Array) -> jax.Array:
+    """Activation scale from a calibration batch: max|x|/127 (symmetric)."""
+    amax = jnp.max(jnp.abs(x_f32.astype(jnp.float32)))
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
 def quantized_matmul(x: jax.Array, wq: Quantized,
                      use_kernel: bool = True) -> jax.Array:
     """w8a8 GEMM: quantize activations per-tensor, int8×int8→int32 through

@@ -1,0 +1,125 @@
+"""Multi-core network scheduler — the paper's replicated-IP-core mode.
+
+§5.2: one IP core reaches 0.224 GOPS; "when the board is fully utilized"
+~20 replicated cores reach 4.48 GOPS.  Replication on the FPGA takes two
+forms, and both have exact TPU analogues:
+
+* **batch sharding** ("each IP core processes its own image"): the input
+  batch is split across cores.  On a multi-device TPU slice this is data
+  parallelism — one device per IP core via a NamedSharding over the batch
+  axis, GSPMD partitions the jitted program.  On one device the cores are
+  *virtual*: a vmap over batch shards (the compiler interleaves them the
+  way the fabric interleaves replicated cores).
+
+* **kout sharding** ("the kernel sets are divided among the cores", the
+  single-image latency mode): every layer's K output channels are split
+  across cores, each core convolves the SAME feature map with its kernel
+  slice, and the slices concatenate into the next layer's input — the
+  inter-layer concat is the fabric's output-BRAM crossbar (on a real mesh,
+  an all-gather).  Implemented as a ``Backend`` decorator so any network
+  program compiles against it unchanged.
+
+``perfmodel.network_report`` prices both: cycles scale ~1/n_cores until a
+layer's psum count no longer fills all cores.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.banking import divisor_banks
+from repro.core.convcore import Backend, get_backend
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    n_cores: int = 1
+    mode: str = "batch"                 # "batch" | "kout"
+
+
+class KoutShardedBackend:
+    """Backend decorator: split every conv/matmul's output channels across
+    ``n_cores`` virtual IP cores and concatenate (paper kernel-set
+    division).  Each shard sees the full input map — weight-stationary per
+    core, exactly the replicated-core dataflow."""
+
+    def __init__(self, inner: Backend, n_cores: int):
+        self.inner = inner
+        self.n_cores = n_cores
+        self.name = f"{inner.name}@kout{n_cores}"
+
+    def _shards(self, k: int) -> int:
+        n = min(self.n_cores, k)
+        while k % n:
+            n -= 1
+        return n
+
+    def conv(self, x, w, bias=None, *, out_scale=None, plan=None, **kw):
+        k = w.shape[-1]
+        n = self._shards(k)
+        if n == 1:
+            return self.inner.conv(x, w, bias, out_scale=out_scale,
+                                   plan=plan, **kw)
+        if plan is not None:
+            # re-bank for the per-core kernel slice (K/n output channels)
+            plan = replace(plan, kout_banks=divisor_banks(
+                k // n, plan.kout_banks))
+        outs = []
+        for i in range(n):                 # one iteration per fabric core
+            sl = slice(i * (k // n), (i + 1) * (k // n))
+            outs.append(self.inner.conv(
+                x, w[..., sl], None if bias is None else bias[sl],
+                out_scale=(out_scale if out_scale is None
+                           or jnp.ndim(out_scale) == 0 else out_scale[sl]),
+                plan=plan, **kw))
+        return jnp.concatenate(outs, axis=-1)
+
+    def matmul(self, x, w, bias=None):
+        k = w.shape[-1]
+        n = self._shards(k)
+        if n == 1:
+            return self.inner.matmul(x, w, bias)
+        outs = [self.inner.matmul(
+            x, w[:, i * (k // n):(i + 1) * (k // n)],
+            None if bias is None else bias[i * (k // n):(i + 1) * (k // n)])
+            for i in range(n)]
+        return jnp.concatenate(outs, axis=-1)
+
+
+class MultiCoreScheduler:
+    """Run a compiled network program as if on ``n_cores`` replicated IP
+    cores."""
+
+    def __init__(self, config: SchedulerConfig = SchedulerConfig()):
+        assert config.mode in ("batch", "kout"), config.mode
+        self.config = config
+
+    def shard_backend(self, backend_name: str) -> Backend:
+        """kout mode: a Backend whose every layer is kernel-set-sharded."""
+        return KoutShardedBackend(get_backend(backend_name),
+                                  self.config.n_cores)
+
+    def run(self, program, x: jax.Array) -> jax.Array:
+        """batch mode: split the batch over cores.  kout mode: pass
+        through — the cores divide kernels inside the program (compile it
+        against ``shard_backend``), not the batch.
+
+        With enough local devices, one device per IP core (NamedSharding +
+        GSPMD); otherwise vmapped virtual cores on one device."""
+        cores = self.config.n_cores
+        n = x.shape[0]
+        if cores == 1 or self.config.mode == "kout":
+            return program(x)
+        assert n % cores == 0, (n, cores)
+        if jax.device_count() >= cores:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            mesh = jax.make_mesh((cores,), ("cores",),
+                                 devices=jax.devices()[:cores])
+            x = jax.device_put(x, NamedSharding(mesh, P("cores")))
+            return program(x)
+        xs = x.reshape(cores, n // cores, *x.shape[1:])
+        ys = jax.vmap(program)(xs)
+        return ys.reshape(n, *ys.shape[2:])

@@ -1,5 +1,6 @@
 """The paper's IP core as a Pallas TPU kernel: weight-stationary, channel-
-banked, bias-preloaded blocked convolution.
+banked, bias-preloaded blocked convolution with a fused post-processing
+epilogue.
 
 Mapping of the FPGA architecture (DESIGN.md §3):
 
@@ -8,18 +9,29 @@ Mapping of the FPGA architecture (DESIGN.md §3):
   processing depth is finished" (§4.2), then the next kernel set (ko).
 * the weight block (the Weight Loader contents) is VMEM-resident for the
   whole spatial sweep of a grid step — weight-stationary;
-* the output block is revisited across the cin sweep and *initialized with
-  the bias at cin step 0* — the paper's bias-preload trick (M5), so bias
-  costs zero extra passes;
-* the 3×3 window is computed as KH·KW shifted (HW×Cb)@(Cb×Kb) MXU matmuls
-  — the systolic-array form of "9 MACs + adder tree" per PCORE;
+* the accumulator is a VMEM scratch block (the output BRAMs), revisited
+  across the cin sweep and *initialized with the bias at cin step 0* —
+  the paper's bias-preload trick (M5), so bias costs zero extra passes;
+* the KH×KW window is computed as KH·KW shifted (HW×Cb)@(Cb×Kb) MXU
+  matmuls — the systolic-array form of "9 MACs + adder tree" per PCORE;
+  stride-s convolution reads the shifted slices with stride s;
+* on the LAST cin step the fused epilogue runs in VMEM before writeback —
+  ReLU → 2×2 max-pool → requantize(int8) — the FPGA "post-process in the
+  output BRAMs before DMA-out" idiom, so a conv+relu+pool layer costs one
+  HBM round-trip instead of three;
 * Pallas's software pipeline double-buffers the HBM→VMEM block DMA against
   MXU compute across grid steps — the paper's two-stage load/compute
   pipeline (M4).
 
+Padding is materialized by zero-padding the feature map before the kernel
+(the FPGA writes zero margins into the image BRAMs); zero padding is exact
+for the symmetric zero-point-0 int8 scheme.
+
 int8 mode: int8×int8 → int32 accumulation (the production reading of the
-paper's 8-bit datapath).  The bit-exact wrap-around-in-8-bit mode of the
-Fig. 6 waveform lives in ops.conv2d (wrap8=True) on top of the int32 result.
+paper's 8-bit datapath).  With ``out_scale`` the epilogue requantizes to
+int8 in-kernel, so chained layers never round-trip int32 through HBM.  The
+bit-exact wrap-around-in-8-bit mode of the Fig. 6 waveform lives in
+ops.conv2d (wrap8=True) on top of the int32 result.
 
 Spatial extent is kept whole per block (edge-size feature maps fit VMEM
 comfortably: 224×224×Cb int8 ≈ 0.4 MiB/bank); banking.py checks the VMEM
@@ -33,43 +45,74 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import conv_out_shape, normalize_padding
 
 
-def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int, acc_dtype):
+def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
+                 kw: int, stride: int, cin_banks: int, relu: bool,
+                 pool: bool, requant: bool, acc_dtype):
     co = pl.program_id(2)
 
-    oh, ow, kb = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+    oh, ow, kb = acc_ref.shape
     cb = x_ref.shape[3]
 
-    # M5: bias preload — initialize the output accumulator with the bias on
-    # the first channel bank, exactly like preloading the output BRAMs.
+    # M5: bias preload — initialize the accumulator with the bias on the
+    # first channel bank, exactly like preloading the output BRAMs.
     @pl.when(co == 0)
     def _init():
-        o_ref[...] = jnp.broadcast_to(
-            b_ref[...].astype(acc_dtype), o_ref.shape)
+        acc_ref[...] = jnp.broadcast_to(
+            b_ref[...].astype(acc_dtype), acc_ref.shape)
 
-    acc = o_ref[0]                                     # [OH, OW, KB]
-    x = x_ref[0]                                       # [H, W, CB]
-    # KH×KW shifted matmuls — the 9-MAC adder tree on the MXU
+    acc = acc_ref[...]                                 # [OH, OW, KB]
+    x = x_ref[0]                                       # [Hp, Wp, CB]
+    # KH×KW shifted matmuls — the 9-MAC adder tree on the MXU; stride-s
+    # output pixels read every s-th input row/column of the shifted slab
     for dy in range(kh):
         for dx in range(kw):
-            xs = jax.lax.dynamic_slice(
-                x, (dy, dx, 0), (oh, ow, cb)).reshape(oh * ow, cb)
+            xs = jax.lax.slice(
+                x, (dy, dx, 0),
+                (dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, cb),
+                (stride, stride, 1)).reshape(oh * ow, cb)
             wk = w_ref[dy, dx]                         # [CB, KB]
             acc = acc + jnp.dot(
                 xs, wk, preferred_element_type=acc_dtype
             ).reshape(oh, ow, kb)
-    o_ref[0] = acc
+    acc_ref[...] = acc
+
+    # Fused epilogue on the last cin step: the FPGA post-processes the
+    # output BRAMs (activation, pooling, requantization) before writeback.
+    @pl.when(co == cin_banks - 1)
+    def _epilogue():
+        y = acc_ref[...]
+        if relu:
+            y = jnp.maximum(y, 0)
+        if pool:
+            y = jnp.max(y.reshape(oh // 2, 2, ow // 2, 2, kb), axis=(1, 3))
+        if requant:
+            y = jnp.clip(jnp.round(y.astype(jnp.float32) * s_ref[...]),
+                         -128, 127)
+        o_ref[0] = y.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("cin_banks", "kout_banks",
-                                             "interpret"))
-def conv2d_ws(x, w, bias=None, *, cin_banks: int = 4, kout_banks: int = 4,
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "cin_banks", "kout_banks", "relu", "pool",
+    "interpret"))
+def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
+              padding="VALID", cin_banks: int = 4, kout_banks: int = 4,
+              relu: bool = False, pool: bool = False,
               interpret: bool = False):
-    """VALID stride-1 conv, paper dataflow.
+    """Generalized paper-dataflow convolution with fused epilogue.
 
     x: [N,H,W,C]; w: [KH,KW,C,K]; bias: [K] or None → [N,OH,OW,K]
     (f32 accumulate for float inputs, int32 for int8 inputs).
+
+    stride / padding: any stride ≥ 1; "SAME" | "VALID" | int |
+    ((top,bottom),(left,right)).  Epilogue (applied in-VMEM on the last
+    cin step, in this order): ``relu``, ``pool`` (2×2/2 max-pool, floor
+    semantics), ``out_scale`` (requantize to int8; scalar or per-channel
+    [K]).
 
     cin_banks/kout_banks default to the paper's 4×4 banking; C and K must
     divide by them (the paper's divisible-by-4 invariant, §4.1).
@@ -79,7 +122,19 @@ def conv2d_ws(x, w, bias=None, *, cin_banks: int = 4, kout_banks: int = 4,
     assert c == c2, (c, c2)
     assert c % cin_banks == 0 and k % kout_banks == 0, (
         "paper banking invariant: C and K divisible by the bank counts")
-    oh, ow = h - kh + 1, w_dim - kw + 1
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
+                                            h, w_dim)
+    if pt or pb or pl_ or pr:
+        # zero margins written into the image BRAMs (exact for zero-point-0)
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    hp, wp = h + pt + pb, w_dim + pl_ + pr
+    oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
+    if pool:
+        assert oh >= 2 and ow >= 2, "2×2 pool needs a ≥2×2 conv output"
+        oh, ow = (oh // 2) * 2, (ow // 2) * 2     # floor semantics
+        poh, pow_ = oh // 2, ow // 2
+    else:
+        poh, pow_ = oh, ow
     cb, kb = c // cin_banks, k // kout_banks
 
     int_path = x.dtype == jnp.int8
@@ -87,18 +142,29 @@ def conv2d_ws(x, w, bias=None, *, cin_banks: int = 4, kout_banks: int = 4,
     if bias is None:
         bias = jnp.zeros((k,), acc_dtype)
     bias = bias.astype(acc_dtype)
+    requant = out_scale is not None
+    out_dtype = jnp.int8 if requant else acc_dtype
+    # scale broadcast to per-kout-bank blocks ([K] covers scalar + per-chan)
+    scale = jnp.broadcast_to(
+        jnp.asarray(1.0 if out_scale is None else out_scale, jnp.float32),
+        (k,))
 
-    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, acc_dtype=acc_dtype)
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, stride=stride, cin_banks=cin_banks,
+        relu=relu, pool=pool, requant=requant, acc_dtype=acc_dtype)
     out = pl.pallas_call(
         kernel,
         grid=(n, kout_banks, cin_banks),
         in_specs=[
-            pl.BlockSpec((1, h, w_dim, cb), lambda b, ko, co: (b, 0, 0, co)),
+            pl.BlockSpec((1, hp, wp, cb), lambda b, ko, co: (b, 0, 0, co)),
             pl.BlockSpec((kh, kw, cb, kb), lambda b, ko, co: (0, 0, co, ko)),
             pl.BlockSpec((kb,), lambda b, ko, co: (ko,)),
+            pl.BlockSpec((kb,), lambda b, ko, co: (ko,)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, kb), lambda b, ko, co: (b, 0, 0, ko)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, k), acc_dtype),
+        out_specs=pl.BlockSpec((1, poh, pow_, kb),
+                               lambda b, ko, co: (b, 0, 0, ko)),
+        out_shape=jax.ShapeDtypeStruct((n, poh, pow_, k), out_dtype),
+        scratch_shapes=[pltpu.VMEM((oh, ow, kb), acc_dtype)],
         interpret=interpret,
-    )(x, w, bias)
+    )(x, w, bias, scale)
     return out

@@ -61,22 +61,24 @@ matmul_ws.defvjp(_matmul_fwd, _matmul_bwd)
 # ---------------------------------------------------------------------------
 
 
-def conv2d(x, w, bias=None, *, cin_banks: int = 4, kout_banks: int = 4,
-           wrap8: bool = False, out_scale=None):
-    """Paper-dataflow convolution.
+def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
+           cin_banks: int = 4, kout_banks: int = 4, relu: bool = False,
+           pool: bool = False, wrap8: bool = False, out_scale=None):
+    """Paper-dataflow convolution (arbitrary stride / SAME|VALID|explicit
+    padding, fused ReLU → 2×2 max-pool → requantize epilogue).
 
     float in → f32 out; int8 in → int32 out, then
       * wrap8=True: wrap to int8 (bit-matches the paper's Fig. 6 waveform),
-      * out_scale: requantize (int32 × scale → int8), the production path.
+      * out_scale: requantize in-kernel (acc × scale → int8), the
+        production path — chained int8 layers never leave int8 in HBM.
     """
-    out = _conv_mod.conv2d_ws(x, w, bias, cin_banks=cin_banks,
-                              kout_banks=kout_banks, interpret=_interpret())
-    if x.dtype == jnp.int8:
-        if wrap8:
-            return out.astype(jnp.int8)
-        if out_scale is not None:
-            scaled = jnp.round(out.astype(jnp.float32) * out_scale)
-            return jnp.clip(scaled, -128, 127).astype(jnp.int8)
+    fused_scale = out_scale if (x.dtype == jnp.int8 and not wrap8) else None
+    out = _conv_mod.conv2d_ws(x, w, bias, fused_scale, stride=stride,
+                              padding=padding, cin_banks=cin_banks,
+                              kout_banks=kout_banks, relu=relu, pool=pool,
+                              interpret=_interpret())
+    if x.dtype == jnp.int8 and wrap8:
+        return out.astype(jnp.int8)
     return out
 
 

@@ -8,17 +8,56 @@ Includes the paper-faithful int8 datapath variants:
 
 from __future__ import annotations
 
+from typing import Tuple, Union
+
 import jax
 import jax.numpy as jnp
 
+Padding = Union[str, int, Tuple[Tuple[int, int], Tuple[int, int]]]
 
-def conv2d_ref(x, w, bias=None, *, accum_dtype=jnp.float32):
-    """VALID, stride-1 convolution.  x: [N,H,W,C]; w: [KH,KW,C,K] → [N,OH,OW,K].
 
-    The paper's Eq. (2): F(i,j) = Σ_d Σ_m Σ_n I(i+m, j+n, d) · K(m,n,d)."""
+def normalize_padding(padding: Padding, kh: int, kw: int,
+                      stride: int = 1, h: int = 0, w: int = 0
+                      ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Resolve SAME/VALID/int/explicit padding to ((top,bottom),(left,right)).
+
+    SAME follows the TF/XLA convention: output = ceil(in/stride), with the
+    extra pixel (odd total pad) on the bottom/right."""
+    if isinstance(padding, int):
+        return ((padding, padding), (padding, padding))
+    if isinstance(padding, (tuple, list)):
+        (a, b), (c, d) = padding
+        return ((int(a), int(b)), (int(c), int(d)))
+    if padding == "VALID":
+        return ((0, 0), (0, 0))
+    if padding == "SAME":
+        def same(dim, k):
+            out = -(-dim // stride)
+            total = max((out - 1) * stride + k - dim, 0)
+            return (total // 2, total - total // 2)
+        return (same(h, kh), same(w, kw))
+    raise ValueError(f"unknown padding {padding!r}")
+
+
+def conv_out_shape(h: int, w: int, kh: int, kw: int, stride: int = 1,
+                   padding: Padding = "VALID") -> Tuple[int, int]:
+    """Spatial output shape of a conv layer (shared by kernel/banking/perf)."""
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h, w)
+    return ((h + pt + pb - kh) // stride + 1,
+            (w + pl_ + pr - kw) // stride + 1)
+
+
+def conv2d_ref(x, w, bias=None, *, stride: int = 1,
+               padding: Padding = "VALID", accum_dtype=jnp.float32):
+    """General convolution oracle.  x: [N,H,W,C]; w: [KH,KW,C,K] → [N,OH,OW,K].
+
+    The paper's Eq. (2): F(i,j) = Σ_d Σ_m Σ_n I(i·s+m, j·s+n, d) · K(m,n,d),
+    extended with stride s and zero padding."""
+    pad = normalize_padding(padding, w.shape[0], w.shape[1], stride,
+                            x.shape[1], x.shape[2])
     out = jax.lax.conv_general_dilated(
         x.astype(accum_dtype), w.astype(accum_dtype),
-        window_strides=(1, 1), padding="VALID",
+        window_strides=(stride, stride), padding=pad,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         preferred_element_type=accum_dtype)
     if bias is not None:
@@ -26,16 +65,58 @@ def conv2d_ref(x, w, bias=None, *, accum_dtype=jnp.float32):
     return out
 
 
-def conv2d_ref_int8(x, w, bias=None):
-    """int8 × int8 → int32 accumulation (production 8-bit datapath)."""
+def conv2d_ref_int8(x, w, bias=None, *, stride: int = 1,
+                    padding: Padding = "VALID"):
+    """int8 × int8 → int32 accumulation (production 8-bit datapath).
+
+    Zero padding is exact for the symmetric (zero-point-0) int8 scheme."""
     assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    pad = normalize_padding(padding, w.shape[0], w.shape[1], stride,
+                            x.shape[1], x.shape[2])
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.int32), w.astype(jnp.int32),
-        window_strides=(1, 1), padding="VALID",
+        window_strides=(stride, stride), padding=pad,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     if bias is not None:
         out = out + bias.astype(jnp.int32)
     return out
+
+
+def maxpool2d_ref(x, size: int = 2, stride: int = None):
+    """Max pool over [N,H,W,C]; trailing rows/cols that don't fill a window
+    are dropped (floor semantics, matching the fused kernel epilogue)."""
+    stride = size if stride is None else stride
+    init = jnp.iinfo(x.dtype).min if jnp.issubdtype(x.dtype, jnp.integer) \
+        else -jnp.inf
+    return jax.lax.reduce_window(
+        x, jnp.asarray(init, x.dtype), jax.lax.max,
+        (1, size, size, 1), (1, stride, stride, 1), "VALID")
+
+
+def requantize_ref(acc, out_scale):
+    """int32/f32 accumulator × scale → int8 (round-to-nearest, saturating).
+    out_scale: scalar or per-channel [K] (broadcast over the last axis)."""
+    scaled = jnp.round(acc.astype(jnp.float32) * out_scale)
+    return jnp.clip(scaled, -128, 127).astype(jnp.int8)
+
+
+def conv2d_epilogue_ref(x, w, bias=None, *, stride: int = 1,
+                        padding: Padding = "VALID", relu: bool = False,
+                        pool: bool = False, out_scale=None):
+    """Conv + the fused FPGA post-processing chain: ReLU → 2×2 max-pool →
+    requantize, in accumulator precision (the oracle for the fused kernel
+    epilogue)."""
+    if x.dtype == jnp.int8:
+        acc = conv2d_ref_int8(x, w, bias, stride=stride, padding=padding)
+    else:
+        acc = conv2d_ref(x, w, bias, stride=stride, padding=padding)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if pool:
+        acc = maxpool2d_ref(acc)
+    if out_scale is not None:
+        return requantize_ref(acc, out_scale)
+    return acc
 
 
 def conv2d_ref_wrap8(x, w, bias=None):

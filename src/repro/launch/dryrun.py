@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import (ALIASES, ARCH_NAMES, SHAPES, get_config,
                                 shape_applicable)
+from repro.distributed import sharding
 from repro.distributed.sharding import ShardingPlan
 from repro.launch.mesh import make_production_mesh
 from repro.layers.common import ParamSpec, shape_structs
@@ -126,7 +127,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
 
-    with jax.set_mesh(mesh):
+    with sharding.use_mesh(mesh):
         if shape.kind == "train":
             sspecs = _state_specs(cfg)
             state = shape_structs(sspecs)

@@ -180,15 +180,18 @@ def _finalize_comp(comp: Computation) -> None:
 
 
 def _operands(rest: str) -> List[str]:
-    """Names of top-level operands in 'a, %b, ...), attrs'."""
+    """Names of top-level operands in 'a, %b, ...), attrs'.
+
+    Newer HLO dumps type each operand ('f32[64,128]{1,0} %Arg_0.1'); the
+    name is always the last whitespace-separated token."""
     depth = 0
     out = []
     token = ""
     for ch in rest:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
-            if depth == 0:
+        elif ch in ")]}":
+            if ch == ")" and depth == 0:
                 out.append(token)
                 break
             depth -= 1
@@ -197,7 +200,7 @@ def _operands(rest: str) -> List[str]:
             token = ""
             continue
         token += ch
-    return [t.strip().lstrip("%") for t in out if t.strip()]
+    return [t.strip().split()[-1].lstrip("%") for t in out if t.strip()]
 
 
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')

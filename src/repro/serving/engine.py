@@ -1,5 +1,6 @@
-"""Batched serving engine: continuous-batching-lite over fixed slots.
+"""Batched serving engines.
 
+LM path (``ServingEngine``): continuous-batching-lite over fixed slots.
 A fixed pool of B slots runs lockstep decode steps (one jit'd program, the
 same one the decode dry-run cells lower).  Requests are admitted into free
 slots between steps: a slot prefill writes its KV into the batch cache at
@@ -10,6 +11,13 @@ batching provides.
 For simplicity the reference engine prefilires per-request with batch-1
 programs and scatters into the pool cache; a production engine would batch
 prefills — the scatter/cache layout already supports it.
+
+Conv-net path (``ConvNetEngine``): the image-classification analogue over
+the network executor (core/network.py).  Single-image requests are
+microbatched into one fixed-shape jitted int8 NetworkPlan program (partial
+batches zero-pad — one compiled program serves all), and the batch spreads
+over replicated IP cores via core/scheduler.py, the paper's full-board
+serving mode.
 """
 
 from __future__ import annotations
@@ -117,6 +125,55 @@ class ServingEngine:
             done.extend(r for r in requests if r.done)
             requests = [r for r in requests if not r.done]
         return done
+
+
+class ConvNetEngine:
+    """Image serving over a compiled NetworkPlan int8 program.
+
+    One fixed [batch, H, W, C] jitted program (zero-padded partial
+    batches), optionally batch-sharded over ``n_cores`` replicated IP
+    cores (core/scheduler.py).  ``submit`` is synchronous microbatching —
+    the conv analogue of the LM engine's lockstep step."""
+
+    def __init__(self, qnet, *, batch: int = 8, n_cores: int = 1,
+                 backend: str = "pallas"):
+        from repro.core.convcore import ConvCoreConfig
+        from repro.core.network import make_int8_program
+        from repro.core.scheduler import MultiCoreScheduler, SchedulerConfig
+
+        assert batch % max(n_cores, 1) == 0, (batch, n_cores)
+        self.qnet = qnet
+        self.batch = batch
+        self.input_shape = qnet.plan.input_shape
+        self._program = make_int8_program(
+            qnet, ConvCoreConfig(backend=backend, int8=True))
+        self._sched = MultiCoreScheduler(SchedulerConfig(n_cores=n_cores))
+        self.stats = {"requests": 0, "batches": 0, "padded": 0}
+
+    def submit(self, images) -> np.ndarray:
+        """images: [R, H, W, C] array or list of [H,W,C] → logits [R, K]."""
+        imgs = np.asarray(images, np.float32)
+        if imgs.ndim == 3:
+            imgs = imgs[None]
+        r = imgs.shape[0]
+        assert imgs.shape[1:] == self.input_shape, (
+            imgs.shape, self.input_shape)
+        outs = []
+        for lo in range(0, r, self.batch):
+            chunk = imgs[lo:lo + self.batch]
+            pad = self.batch - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((pad, *self.input_shape), np.float32)])
+                self.stats["padded"] += pad
+            logits = self._sched.run(self._program, jnp.asarray(chunk))
+            outs.append(np.asarray(logits)[:self.batch - pad])
+            self.stats["batches"] += 1
+        self.stats["requests"] += r
+        if not outs:
+            k = self.qnet.plan.activation_shapes()[-1][-1]
+            return np.zeros((0, k), np.float32)
+        return np.concatenate(outs)
 
 
 def _scatter_slot(pool, one, slot: int):

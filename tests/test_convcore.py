@@ -61,6 +61,18 @@ def test_multi_layer_chaining():
     np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
 
 
+def test_wrap8_epilogue_backend_parity():
+    """wrap8 + fused epilogue: both backends apply ReLU/pool on the int32
+    accumulator, then wrap — ref stays the correctness contract."""
+    x = jnp.asarray(RNG.integers(-128, 128, (1, 12, 12, 4)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-128, 128, (3, 3, 4, 4)), jnp.int8)
+    outs = [ConvCore(ConvCoreConfig(backend=b, int8=True, wrap8=True))
+            .apply_layer(x, w, relu=True, pool=True)
+            for b in ("pallas", "ref")]
+    assert outs[0].dtype == jnp.int8
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
 def test_vmem_plan_for_paper_layer():
     plan = plan_banks(224, 224, 8, 8, in_bytes=1)
     assert plan.fits_vmem

@@ -1,5 +1,9 @@
 """conv2d_ws Pallas kernel vs the pure-jnp oracle: shape/dtype sweeps,
-banking variants, int8/wrap8 datapaths, bias preload."""
+banking variants, int8/wrap8 datapaths, bias preload, stride/padding
+generality, and the fused ReLU → max-pool → requantize epilogue.
+
+Every generalized case is checked against ``lax.conv_general_dilated``
+(through kernels/ref.py) — the oracle itself is built on it."""
 
 import jax
 import jax.numpy as jnp
@@ -87,4 +91,78 @@ def test_requantized_output():
     acc = ref.conv2d_ref_int8(x, wgt)
     want = jnp.clip(jnp.round(acc.astype(jnp.float32) * scale),
                     -128, 127).astype(jnp.int8)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Generalized conv: stride / padding / fused epilogue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["VALID", "SAME"])
+def test_stride_padding_matches_lax(stride, padding):
+    x, wgt, b = _f32(2, 13, 11, 8), _f32(3, 3, 8, 4), _f32(4)
+    got = ops.conv2d(x, wgt, b, stride=stride, padding=padding)
+    pad = ref.normalize_padding(padding, 3, 3, stride, 13, 11)
+    want = jax.lax.conv_general_dilated(
+        x, wgt, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_explicit_padding():
+    x, wgt = _f32(1, 9, 9, 4), _f32(3, 3, 4, 4)
+    got = ops.conv2d(x, wgt, padding=((2, 1), (0, 2)))
+    want = jax.lax.conv_general_dilated(
+        x, wgt, window_strides=(1, 1), padding=((2, 1), (0, 2)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID")])
+def test_fused_relu_pool_epilogue(stride, padding):
+    """ReLU + 2×2 max-pool fused in the kernel == lax conv + post ops."""
+    x, wgt, b = _f32(1, 12, 14, 4), _f32(3, 3, 4, 8), _f32(8)
+    got = ops.conv2d(x, wgt, b, stride=stride, padding=padding,
+                     relu=True, pool=True)
+    conv = jax.lax.conv_general_dilated(
+        x, wgt, window_strides=(stride, stride),
+        padding=ref.normalize_padding(padding, 3, 3, stride, 12, 14),
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    want = ref.maxpool2d_ref(jnp.maximum(conv, 0))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pool_floor_semantics_odd_output():
+    """Odd conv outputs drop the trailing row/col (floor), like the oracle."""
+    x, wgt = _f32(1, 9, 9, 4), _f32(3, 3, 4, 4)     # VALID → 7×7 conv out
+    got = ops.conv2d(x, wgt, pool=True)
+    want = ref.maxpool2d_ref(ref.conv2d_ref(x, wgt))
+    assert got.shape == (1, 3, 3, 4)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_int8_fused_epilogue_exact(per_channel):
+    """The production path: int8 in, fused ReLU→pool→requantize, int8 out —
+    bit-exact vs the int32 oracle chain."""
+    x, wgt = _i8(1, 12, 12, 8), _i8(3, 3, 8, 8)
+    b = jnp.asarray(RNG.integers(-500, 500, size=(8,)), jnp.int32)
+    scale = (jnp.asarray(RNG.uniform(5e-4, 2e-3, size=(8,)), jnp.float32)
+             if per_channel else jnp.float32(1e-3))
+    got = ops.conv2d(x, wgt, b, stride=2, padding="SAME", relu=True,
+                     pool=True, out_scale=scale)
+    want = ref.conv2d_epilogue_ref(x, wgt, b, stride=2, padding="SAME",
+                                   relu=True, pool=True, out_scale=scale)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(got, want)
+
+
+def test_int8_stride2_same_exact():
+    x, wgt = _i8(2, 11, 11, 4), _i8(3, 3, 4, 8)
+    got = ops.conv2d(x, wgt, stride=2, padding="SAME")
+    want = ref.conv2d_ref_int8(x, wgt, stride=2, padding="SAME")
+    assert got.dtype == jnp.int32
     np.testing.assert_array_equal(got, want)

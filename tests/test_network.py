@@ -1,0 +1,217 @@
+"""Network executor + multi-core scheduler: LayerSpec/NetworkPlan shape
+math, int8 scale chaining, backend parity, the LeNet acceptance path
+(stride-2 / SAME / fused pool through Pallas vs the float lax reference
+within quantization tolerance), replicated-IP-core scheduling, the
+conv-net serving engine, and the whole-network §5.2 cycle model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import network, perfmodel, scheduler
+from repro.core.convcore import ConvCoreConfig, get_backend, register_backend
+from repro.core.quantize import requant_scale
+from repro.kernels import ref
+from repro.serving.engine import ConvNetEngine
+
+RNG = np.random.default_rng(11)
+
+
+def _lenet_setup(batch=4):
+    plan = network.lenet()
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(batch, *plan.input_shape)), jnp.float32)
+    return plan, params, x
+
+
+def test_activation_and_param_shapes():
+    plan = network.lenet()
+    assert plan.activation_shapes() == [
+        (14, 14, 8), (7, 7, 16), (4, 4, 32), (512,), (64,), (10,)]
+    shapes = plan.param_shapes()
+    assert shapes[0] == {"w": (3, 3, 1, 8), "b": (8,)}
+    assert shapes[2] == {"w": (3, 3, 16, 32), "b": (32,)}
+    assert shapes[3] is None                       # flatten
+    assert shapes[4] == {"w": (512, 64), "b": (64,)}
+
+
+def test_float_reference_matches_lax_composition():
+    """apply_ref == hand-composed lax ops (the oracle is itself audited)."""
+    plan, params, x = _lenet_setup(batch=2)
+    got = plan.apply_ref(params, x)
+    h = x
+    for sp, p in zip(plan.layers, params):
+        if sp.kind == "conv":
+            h = jax.lax.conv_general_dilated(
+                h, p["w"], window_strides=(sp.stride, sp.stride),
+                padding=ref.normalize_padding(
+                    sp.padding, *sp.kernel, sp.stride, h.shape[1],
+                    h.shape[2]),
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+            if sp.relu:
+                h = jnp.maximum(h, 0)
+            if sp.pool:
+                h = ref.maxpool2d_ref(h)
+        elif sp.kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+        elif sp.kind == "dense":
+            h = h @ p["w"] + p["b"]
+            if sp.relu:
+                h = jnp.maximum(h, 0)
+    np.testing.assert_allclose(got, h, rtol=1e-5, atol=1e-5)
+
+
+def test_lenet_int8_end_to_end_acceptance():
+    """The PR acceptance gate: a LeNet-style int8 NetworkPlan (3 conv
+    layers with stride-2 / SAME / fused pool among them) runs end-to-end
+    through the Pallas backend and matches the float lax reference within
+    quantization tolerance."""
+    plan, params, x = _lenet_setup()
+    want = plan.apply_ref(params, x)
+    qnet = network.quantize_network(plan, params, x)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))
+    got = program(x)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.1, rel
+
+
+def test_int8_backends_bit_identical():
+    """Pallas and ref backends produce the SAME int8 network (every
+    inter-layer tensor requantizes identically)."""
+    plan, params, x = _lenet_setup(batch=2)
+    qnet = network.quantize_network(plan, params, x)
+    a = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))(x)
+    b = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scale_chaining_is_consistent():
+    """requant_scale puts layer-i accumulators on layer-i+1's int8 grid:
+    quantizing the float activation directly == requantizing the int32
+    accumulator (up to the ±1 LSB of the two rounding paths)."""
+    s_in, s_w = jnp.float32(0.02), jnp.float32(0.005)
+    acc = jnp.asarray(RNG.integers(-20000, 20000, size=(64,)), jnp.int32)
+    float_act = acc.astype(jnp.float32) * s_in * s_w
+    s_out = jnp.max(jnp.abs(float_act)) / 127.0
+    via_requant = ref.requantize_ref(acc, requant_scale(s_in, s_w, s_out))
+    direct = jnp.clip(jnp.round(float_act / s_out), -128, 127)
+    assert int(jnp.max(jnp.abs(
+        via_requant.astype(jnp.int32) - direct.astype(jnp.int32)))) <= 1
+
+
+def test_vgg_small_runs():
+    plan = network.vgg_small()
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))
+    want = plan.apply_ref(params, x)
+    got = program(x)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.15, rel
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: replicated IP cores
+# ---------------------------------------------------------------------------
+
+
+def test_batch_sharded_virtual_cores_exact():
+    plan, params, x = _lenet_setup(batch=4)
+    qnet = network.quantize_network(plan, params, x)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))
+    want = program(x)
+    sched = scheduler.MultiCoreScheduler(
+        scheduler.SchedulerConfig(n_cores=2))
+    got = sched.run(program, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("inner", ["ref", "pallas"])
+def test_kout_sharded_backend_exact(inner):
+    """Kernel-set division across cores == the unsharded network (the
+    pallas case also checks per-shard bank-plan rebanking)."""
+    plan, params, x = _lenet_setup(batch=2)
+    qnet = network.quantize_network(plan, params, x)
+    base = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    sched = scheduler.MultiCoreScheduler(
+        scheduler.SchedulerConfig(n_cores=4, mode="kout"))
+    kb = sched.shard_backend(inner)
+    register_backend(kb)
+    got = network.make_int8_program(
+        qnet, ConvCoreConfig(backend=kb.name, int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_kout_mode_run_passes_batch_through():
+    """mode='kout' must not batch-split (cores divide kernels instead), so
+    batch=1 single-image latency mode works."""
+    plan, params, x = _lenet_setup(batch=1)
+    qnet = network.quantize_network(plan, params, x)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))
+    sched = scheduler.MultiCoreScheduler(
+        scheduler.SchedulerConfig(n_cores=4, mode="kout"))
+    got = sched.run(program, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(program(x)))
+
+
+def test_kout_shards_degrade_for_awkward_channels():
+    kb = scheduler.KoutShardedBackend(get_backend("ref"), 4)
+    assert kb._shards(8) == 4
+    assert kb._shards(10) == 2
+    assert kb._shards(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# Serving + perfmodel consumers
+# ---------------------------------------------------------------------------
+
+
+def test_convnet_serving_engine_pads_partial_batches():
+    plan, params, x = _lenet_setup(batch=4)
+    qnet = network.quantize_network(plan, params, x)
+    engine = ConvNetEngine(qnet, batch=4, n_cores=2, backend="pallas")
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))
+    imgs = np.asarray(RNG.normal(size=(6, 28, 28, 1)), np.float32)
+    logits = engine.submit(imgs)
+    assert logits.shape == (6, 10)
+    want = program(jnp.asarray(imgs[:4]))
+    np.testing.assert_array_equal(logits[:4], np.asarray(want))
+    assert engine.stats == {"requests": 6, "batches": 2, "padded": 2}
+    # empty request list keeps the [R, K] contract
+    assert engine.submit(np.zeros((0, 28, 28, 1), np.float32)).shape \
+        == (0, 10)
+
+
+def test_network_perf_report():
+    plan = network.lenet()
+    rep = plan.perf_report()
+    # layer-at-a-time: total == sum of per-layer cycle counts
+    assert rep["cycles"] == sum(r["cycles"] for r in rep["layers"])
+    assert rep["cycles"] > 0 and rep["seconds"] > 0
+    # one IP core sustains the paper's 0.224 GOPS on psum-dense networks
+    assert rep["gops_paper"] == pytest.approx(0.224, rel=1e-2)
+    fb = rep["full_board"]
+    assert fb["ip_cores"] == 20
+    assert fb["seconds"] < rep["seconds"] / 10      # ≥10× from 20 cores
+    assert fb["gops_paper"] == pytest.approx(4.48, rel=0.05)
+
+
+def test_psum_count_stride_padding():
+    # SAME stride-1: output pixels == input pixels
+    assert perfmodel.psum_count(14, 14, 8, 16, 3, 3, 1, "SAME") \
+        == 14 * 14 * 16 * 8
+    # stride-2 SAME: ceil(14/2)=7
+    assert perfmodel.psum_count(14, 14, 8, 16, 3, 3, 2, "SAME") \
+        == 7 * 7 * 16 * 8
+    # VALID unchanged vs the seed accounting
+    assert perfmodel.psum_count(224, 224, 8, 8) == 3_154_176
