@@ -1,16 +1,27 @@
-"""Whole-network benchmark: LeNet / VGG-small int8 NetworkPlans through the
-Pallas backend (interpret on CPU — functional timing reference), with the
-§5.2 cycle model's whole-network prediction alongside the measurement.
+"""Whole-network benchmark: LeNet / VGG-small / large-map int8
+NetworkPlans through the Pallas backend (interpret on CPU — functional
+timing reference), with the §5.2 cycle model's whole-network prediction
+alongside the measurement.
+
+The large-map network's first layer exceeds the whole-map VMEM budget —
+it only runs because the spatially-tiled conv pipeline streams it through
+halo'd H/W blocks; its model row also carries the tile-revisit / halo
+DMA pricing (perfmodel.tile_traffic).
 
 Emits ``BENCH_network.json`` so the perf trajectory of the network executor
 is tracked across PRs: per-network images/s, layers/s, measured µs/batch,
-and the model-predicted FPGA times (1 IP core and the 20-core full board).
+the model-predicted FPGA times (1 IP core and the 20-core full board),
+and per-plan tiling stats.
+
+``--smoke`` (or run(smoke=True)) times LeNet only with minimal iterations
+— the CI fast path.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -24,27 +35,35 @@ BATCH = 4
 OUT_PATH = os.environ.get("BENCH_NETWORK_JSON", "BENCH_network.json")
 
 
-def _bench_plan(plan: network.NetworkPlan, rng) -> dict:
+def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
+                iters: int = 3, warmup: int = 1) -> dict:
     params = plan.init_params(rng)
     x = jnp.asarray(
-        rng.normal(size=(BATCH, *plan.input_shape)), jnp.float32)
+        rng.normal(size=(batch, *plan.input_shape)), jnp.float32)
     qnet = network.quantize_network(plan, params, x)
-    program = network.make_int8_program(
-        qnet, ConvCoreConfig(backend="pallas", int8=True))
-    us = time_fn(lambda: program(x), iters=3, warmup=1)
+    cfg = ConvCoreConfig(backend="pallas", int8=True)
+    # the very plans the compiled program executes — reported stats can't
+    # drift from the measured run
+    tile_plans = network.program_tile_plans(plan, cfg)
+    program = network.make_int8_program(qnet, cfg, tile_plans=tile_plans)
+    us = time_fn(lambda: program(x), iters=iters, warmup=warmup)
 
     n_layers = len(plan.layers)
-    rep = plan.perf_report()
+    rep = plan.perf_report(tile_plans=tile_plans)
     fb = rep["full_board"]
-    images_s = BATCH / (us * 1e-6)
-    layers_s = BATCH * n_layers / (us * 1e-6)
+    tiled_layers = sum(1 for tp in tile_plans if tp is not None and tp.tiled)
+    halo_max = max((tp.halo_read_factor for tp in tile_plans
+                    if tp is not None), default=1.0)
+    images_s = batch / (us * 1e-6)
+    layers_s = batch * n_layers / (us * 1e-6)
     emit(f"network/{plan.name}", us,
          f"images_s={images_s:.1f};layers_s={layers_s:.1f};"
          f"model_ms={rep['seconds']*1e3:.3f};"
-         f"model_ms_20core={fb['seconds']*1e3:.3f}")
+         f"model_ms_20core={fb['seconds']*1e3:.3f};"
+         f"tiled_layers={tiled_layers};halo_factor={halo_max:.3f}")
     return {
         "name": plan.name,
-        "batch": BATCH,
+        "batch": batch,
         "layers": n_layers,
         "measured_us_per_batch": us,
         "images_per_s": images_s,
@@ -54,16 +73,32 @@ def _bench_plan(plan: network.NetworkPlan, rng) -> dict:
         "model_gops_1core": rep["gops_paper"],
         "model_seconds_20core": fb["seconds"],
         "model_gops_20core": fb["gops_paper"],
+        "tiled_layers": tiled_layers,
+        "max_halo_read_factor": halo_max,
     }
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(3)
+    if smoke:
+        # CI fast path: time LeNet only and do NOT touch the tracked
+        # BENCH_network.json — that file records the cross-PR trajectory
+        # of the full run
+        _bench_plan(network.lenet(), rng, batch=2, iters=1, warmup=1)
+        return
     results = [_bench_plan(network.lenet(), rng),
-               _bench_plan(network.vgg_small(), rng)]
+               _bench_plan(network.vgg_small(), rng),
+               # the tiled-pipeline workload: exceeds whole-map VMEM
+               _bench_plan(network.large_map(), rng, batch=2,
+                           iters=1, warmup=0)]
     payload = {"backend": jax.default_backend(),
                "interpret": jax.default_backend() != "tpu",
                "networks": results}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     emit("network/json", 0.0, f"path={OUT_PATH}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

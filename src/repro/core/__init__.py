@@ -7,12 +7,14 @@ from one layer to whole networks.
                                 Backend protocol + registry for dispatch
 * network                     — LayerSpec/NetworkPlan graphs compiled into
                                 jitted multi-layer int8 programs
-* scheduler                   — the replicated-IP-core mode (batch / kout
-                                sharding over devices or virtual cores)
+* scheduler                   — the replicated-IP-core mode (batch / kout /
+                                spatial sharding over devices or virtual
+                                cores)
 * perfmodel                   — the paper's §5.2 cycle/GOPS model, exact,
-                                extended to whole-network estimates
-* banking                     — BRAM↔VMEM bank planning (§4.1),
-                                stride/padding-aware
+                                extended to whole-network estimates with
+                                tile-revisit / halo-re-read DMA pricing
+* banking                     — BRAM↔VMEM bank + spatial-tile planning
+                                (§4.1 → TilePlan), stride/padding-aware
 * quantize                    — the 8-bit datapath as reusable substrate
 """
 

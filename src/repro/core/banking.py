@@ -1,25 +1,50 @@
-"""BRAM-bank ↔ VMEM-block mapping math (paper §4.1 → TPU v5e).
+"""BRAM-bank ↔ VMEM-block mapping math (paper §4.1 → TPU v5e), promoted to
+a full spatial-tile planner.
 
 The paper stores one quarter of the channels per BRAM (4 image BMGs) and a
-4×4 grid of kernel BMGs.  On TPU the analogous resource is VMEM: a grid
-step's working set is (padded image block + weight block + accumulator +
-epilogue output block) × pipeline double-buffering; this module sizes bank
-counts so the working set fits the per-core VMEM budget, and enforces the
-paper's divisible-by-4 invariant.
+4×4 grid of kernel BMGs; crucially its image BRAMs are *fixed-size* — maps
+stream through a bounded window, they are never required to fit whole.  On
+TPU the analogous resource is VMEM: a grid step's working set is
 
-Stride / padding awareness: the image block is the *padded* map (the FPGA
-writes zero margins into the image BRAMs) and the accumulator block is the
-*strided* conv output, so plans stay correct for SAME / stride-2 / pooled
-layers.
+    2 × (halo'd image block + weight block + epilogue output block)
+      + accumulator scratch
+
+— the ×2 is Pallas's load/compute pipeline double-buffering (M4) of the
+DMA'd blocks; the accumulator scratch is a single persistent VMEM buffer
+revisited across the cin sweep, so it is *not* double-buffered, and the
+epilogue output block is the post-pool block in the output dtype (int8
+when the epilogue requantizes) — counting those two separately is what
+keeps ``fits_vmem`` truthful.
+
+``plan_tiles`` jointly chooses (h_tile, w_tile, cin_banks, kout_banks):
+starting from the paper's 4×4 banking and the whole map as one tile, it
+greedily applies whichever legal move (halve a spatial tile dimension,
+double a bank count) shrinks the working set most, until the plan fits
+the VMEM budget or nothing can shrink further.  Tile-size halving keeps
+tiles pool-aligned (even extents when the 2×2 epilogue pool is fused) so
+pool windows never straddle tile edges.
+
+Halo math: an ``h_tile × w_tile`` conv-output tile at stride s consumes a
+``((h_tile−1)·s + kh) × ((w_tile−1)·s + kw)`` halo'd input window;
+adjacent windows overlap by ``k − s`` rows/columns, which are re-read
+from HBM per tile (the FPGA re-DMAs its BRAM window boundaries the same
+way).  core/perfmodel.tile_traffic prices that re-read.
+
+Stride / padding awareness: the image window lives in the *padded* map
+(the FPGA writes zero margins into the image BRAMs) and the accumulator
+block is the *strided* conv output, so plans stay correct for SAME /
+stride-2 / pooled layers.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
-from repro.kernels.ref import conv_out_shape, normalize_padding
+from repro.kernels.ref import conv_out_shape, halo_window, normalize_padding
 
-VMEM_BYTES_V5E = 128 * 1024 * 1024   # ~128 MiB per TensorCore
+VMEM_BYTES = 16 * 1024 * 1024        # realistic per-core VMEM (~16 MiB)
+VMEM_BYTES_V5E = 128 * 1024 * 1024   # legacy generous budget (BankPlan)
 
 
 @dataclass(frozen=True)
@@ -28,31 +53,39 @@ class BankPlan:
     kout_banks: int
     image_block_bytes: int
     weight_block_bytes: int
-    output_block_bytes: int
+    output_block_bytes: int           # epilogue output block (out dtype)
     stride: int = 1
     out_h: int = 0                    # conv output (pre-pool) spatial shape
     out_w: int = 0
+    acc_block_bytes: int = 0          # accumulator scratch (acc dtype)
+    budget: int = VMEM_BYTES_V5E      # the budget the plan was sized for
 
     @property
     def working_set_bytes(self) -> int:
-        # ×2: Pallas double-buffers input blocks (load/compute pipeline, M4)
-        return (2 * (self.image_block_bytes + self.weight_block_bytes)
-                + self.output_block_bytes)
+        # ×2: Pallas double-buffers the DMA'd blocks (load/compute
+        # pipeline, M4); the accumulator scratch is a single persistent
+        # buffer — counted once, separately from the epilogue output.
+        return (2 * (self.image_block_bytes + self.weight_block_bytes
+                     + self.output_block_bytes) + self.acc_block_bytes)
 
     @property
     def fits_vmem(self) -> bool:
-        return self.working_set_bytes <= VMEM_BYTES_V5E
+        return self.working_set_bytes <= self.budget
 
 
 def plan_banks(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
                in_bytes: int = 1, acc_bytes: int = 4,
+               out_bytes: Optional[int] = None,
                cin_banks: int = 4, kout_banks: int = 4,
                stride: int = 1, padding="VALID",
                vmem_budget: int = VMEM_BYTES_V5E) -> BankPlan:
-    """Start from the paper's 4×4 banking; double bank counts until the
-    working set fits VMEM (each doubling halves the per-bank block)."""
+    """Channel-bank-only legacy planner: start from the paper's 4×4
+    banking; double bank counts until the working set fits VMEM (each
+    doubling halves the per-bank block).  ``plan_tiles`` supersedes this
+    with joint spatial/channel planning."""
     assert c % cin_banks == 0 and k % kout_banks == 0, (
         "divisible-by-4 invariant (paper §4.1)")
+    out_bytes = acc_bytes if out_bytes is None else out_bytes
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h, w)
     hp, wp = h + pt + pb, w + pl_ + pr
     oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
@@ -62,12 +95,14 @@ def plan_banks(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
             cin_banks=cin_banks, kout_banks=kout_banks,
             image_block_bytes=hp * wp * cb * in_bytes,
             weight_block_bytes=kh * kw * cb * kb * in_bytes,
-            output_block_bytes=oh * ow * kb * acc_bytes,
+            output_block_bytes=oh * ow * kb * out_bytes,
             stride=stride, out_h=oh, out_w=ow,
+            acc_block_bytes=oh * ow * kb * acc_bytes,
+            budget=vmem_budget,
         )
         if plan.fits_vmem or (cb == 1 and kb == 1):
             return plan
-        if plan.image_block_bytes >= plan.output_block_bytes and cb > 1 \
+        if plan.image_block_bytes >= plan.acc_block_bytes and cb > 1 \
                 and c % (cin_banks * 2) == 0:
             cin_banks *= 2
         elif kb > 1 and k % (kout_banks * 2) == 0:
@@ -76,6 +111,138 @@ def plan_banks(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
             cin_banks *= 2
         else:
             return plan
+
+
+@dataclass(frozen=True)
+class TilePlan:
+    """A joint (spatial tile × channel bank) decomposition of one conv
+    layer for the tiled conv2d_ws kernel.
+
+    ``h_tile``/``w_tile`` are conv-output tile extents (pre-pool pixels);
+    ``in_h_tile``/``in_w_tile`` the halo'd input windows they consume.
+    Byte fields are per-grid-step VMEM blocks; see the module docstring
+    for the working-set accounting."""
+    cin_banks: int
+    kout_banks: int
+    h_tile: int
+    w_tile: int
+    n_h_tiles: int
+    n_w_tiles: int
+    in_h_tile: int                    # (h_tile-1)·stride + kh
+    in_w_tile: int
+    image_block_bytes: int            # halo'd input window × cb × in_bytes
+    weight_block_bytes: int
+    acc_block_bytes: int              # accumulator scratch (acc dtype)
+    output_block_bytes: int           # epilogue output block (out dtype)
+    stride: int = 1
+    out_h: int = 0                    # whole-map conv output (pool-floored)
+    out_w: int = 0
+    pool: bool = False
+    in_bytes: int = 1
+    budget: int = VMEM_BYTES
+
+    @property
+    def working_set_bytes(self) -> int:
+        return (2 * (self.image_block_bytes + self.weight_block_bytes
+                     + self.output_block_bytes) + self.acc_block_bytes)
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.working_set_bytes <= self.budget
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_h_tiles * self.n_w_tiles
+
+    @property
+    def tiled(self) -> bool:
+        return self.n_tiles > 1
+
+    @property
+    def halo_read_factor(self) -> float:
+        """Input bytes DMA'd with tiling ÷ the whole-map input bytes for
+        one full kout sweep — ≥ 1; the excess is halo re-reads (plus the
+        zero-extension of the trailing partial tiles)."""
+        kh = self.in_h_tile - (self.h_tile - 1) * self.stride
+        kw = self.in_w_tile - (self.w_tile - 1) * self.stride
+        whole = (halo_window(self.out_h, self.stride, kh)
+                 * halo_window(self.out_w, self.stride, kw))
+        tiled = self.n_tiles * self.in_h_tile * self.in_w_tile
+        return tiled / whole if whole else 1.0
+
+
+def _align_tile(v: int, pool: bool) -> int:
+    if pool:
+        return max(2, -(-v // 2) * 2)
+    return max(1, v)
+
+
+def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
+               stride: int = 1, padding="VALID", pool: bool = False,
+               in_bytes: int = 1, acc_bytes: int = 4,
+               out_bytes: Optional[int] = None,
+               cin_banks: int = 4, kout_banks: int = 4,
+               vmem_budget: Optional[int] = VMEM_BYTES) -> TilePlan:
+    """Jointly choose (h_tile, w_tile, cin_banks, kout_banks) so the true
+    per-grid-step working set fits ``vmem_budget``.
+
+    Greedy descent from (whole map, requested banks): each step applies
+    the legal move — halve h_tile, halve w_tile (kept pool-aligned),
+    double cin_banks, double kout_banks — that shrinks the working set
+    most; stops when the plan fits or no move shrinks it.  With
+    ``vmem_budget=None`` no fitting is attempted (whole-map single tile —
+    the seed dataflow).
+
+    ``out_bytes`` is the epilogue output element size (1 when the fused
+    requantize writes int8; defaults to ``acc_bytes``)."""
+    assert c % cin_banks == 0 and k % kout_banks == 0, (
+        "banking invariant: C and K divisible by the bank counts")
+    out_bytes = acc_bytes if out_bytes is None else out_bytes
+    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
+    if pool:
+        oh, ow = max(2, (oh // 2) * 2), max(2, (ow // 2) * 2)
+    budget = VMEM_BYTES if vmem_budget is None else vmem_budget
+
+    def build(th: int, tw: int, cbn: int, kbn: int) -> TilePlan:
+        cb, kb = c // cbn, k // kbn
+        in_th = halo_window(th, stride, kh)
+        in_tw = halo_window(tw, stride, kw)
+        pth, ptw = (th // 2, tw // 2) if pool else (th, tw)
+        return TilePlan(
+            cin_banks=cbn, kout_banks=kbn, h_tile=th, w_tile=tw,
+            n_h_tiles=-(-oh // th), n_w_tiles=-(-ow // tw),
+            in_h_tile=in_th, in_w_tile=in_tw,
+            image_block_bytes=in_th * in_tw * cb * in_bytes,
+            weight_block_bytes=kh * kw * cb * kb * in_bytes,
+            acc_block_bytes=th * tw * kb * acc_bytes,
+            output_block_bytes=pth * ptw * kb * out_bytes,
+            stride=stride, out_h=oh, out_w=ow, pool=pool,
+            in_bytes=in_bytes, budget=budget)
+
+    state = (oh, ow, cin_banks, kout_banks)
+    plan = build(*state)
+    if vmem_budget is None:
+        return plan
+    min_tile = 2 if pool else 1
+    while not plan.fits_vmem:
+        th, tw, cbn, kbn = state
+        moves = []
+        if _align_tile(-(-th // 2), pool) < th and th > min_tile:
+            moves.append((_align_tile(-(-th // 2), pool), tw, cbn, kbn))
+        if _align_tile(-(-tw // 2), pool) < tw and tw > min_tile:
+            moves.append((th, _align_tile(-(-tw // 2), pool), cbn, kbn))
+        if c // cbn > 1 and c % (cbn * 2) == 0:
+            moves.append((th, tw, cbn * 2, kbn))
+        if k // kbn > 1 and k % (kbn * 2) == 0:
+            moves.append((th, tw, cbn, kbn * 2))
+        candidates = [(build(*m), m) for m in moves]
+        candidates = [(p, m) for p, m in candidates
+                      if p.working_set_bytes < plan.working_set_bytes]
+        if not candidates:
+            return plan                # nothing shrinks further: best effort
+        plan, state = min(candidates,
+                          key=lambda pm: pm[0].working_set_bytes)
+    return plan
 
 
 def divisor_banks(dim: int, want: int) -> int:

@@ -8,7 +8,9 @@ paper's stride-1 VALID demo: any stride, SAME/VALID/explicit padding, and
 the fused post-processing epilogue (ReLU → 2×2 max-pool → requantize)
 executed before writeback.  Bank counts degrade gracefully for channel
 counts that break the divisible-by-4 invariant (a C=1 grayscale input
-layer runs on one image BMG).
+layer runs on one image BMG), and ``ConvCore.plan`` returns a joint
+``banking.TilePlan`` — feature maps whose whole-map working set exceeds
+the VMEM budget stream through halo'd spatial tiles.
 
 Backends implement the ``Backend`` protocol and live in a registry, so
 ``apply_layer`` is a pure dispatch (no per-dtype if/else ladder):
@@ -37,7 +39,11 @@ from repro.kernels import ops, ref
 
 
 class Backend(Protocol):
-    """One implementation of the IP-core ops (conv + the dense GEMM)."""
+    """One implementation of the IP-core ops (conv + the dense GEMM).
+
+    ``plan`` is a banking.TilePlan: the joint spatial-tile × channel-bank
+    decomposition the conv should run under (None → whole map, paper 4×4
+    banking)."""
 
     name: str
 
@@ -45,7 +51,7 @@ class Backend(Protocol):
              bias: Optional[jax.Array] = None, *, stride: int = 1,
              padding="VALID", relu: bool = False, pool: bool = False,
              out_scale=None, wrap8: bool = False,
-             plan: Optional[banking.BankPlan] = None) -> jax.Array:
+             plan: Optional[banking.TilePlan] = None) -> jax.Array:
         ...
 
     def matmul(self, x: jax.Array, w: jax.Array,
@@ -91,8 +97,13 @@ class PallasBackend:
              plan=None):
         cin_banks = plan.cin_banks if plan else 4
         kout_banks = plan.kout_banks if plan else 4
+        # tile extents are conv-output pixels; the kernel clamps them to
+        # the actual map (shard slices may be smaller than the plan's map)
+        h_tile = plan.h_tile if plan else 0
+        w_tile = plan.w_tile if plan else 0
         return ops.conv2d(x, w, bias, stride=stride, padding=padding,
                           cin_banks=cin_banks, kout_banks=kout_banks,
+                          h_tile=h_tile, w_tile=w_tile,
                           relu=relu, pool=pool, wrap8=wrap8,
                           out_scale=out_scale)
 
@@ -122,7 +133,8 @@ class ConvCoreConfig:
     backend: str = "pallas"       # a BACKENDS registry key
     int8: bool = False            # the paper's 8-bit datapath
     wrap8: bool = False           # bit-faithful 8-bit psum wrap (Fig. 6)
-    auto_bank: bool = False       # let banking.py grow banks to fit VMEM
+    auto_bank: bool = True        # fit spatial tiles + banks to VMEM
+    vmem_budget: int = banking.VMEM_BYTES   # per-core VMEM target
 
 
 class ConvCore:
@@ -131,8 +143,13 @@ class ConvCore:
     def __init__(self, config: ConvCoreConfig = ConvCoreConfig()):
         self.config = config
 
-    def plan(self, x_shape, w_shape, stride: int = 1,
-             padding="VALID") -> banking.BankPlan:
+    def plan(self, x_shape, w_shape, stride: int = 1, padding="VALID",
+             *, pool: bool = False,
+             out_bytes: Optional[int] = None) -> banking.TilePlan:
+        """Joint spatial-tile × channel-bank plan for one layer.  With
+        ``auto_bank`` the planner shrinks tiles / grows banks until the
+        working set fits ``vmem_budget``; otherwise the whole map runs as
+        one tile under the configured banking (the seed dataflow)."""
         n, h, w_, c = x_shape
         kh, kw, _, k = w_shape
         cfg = self.config
@@ -140,19 +157,11 @@ class ConvCore:
         # degrade bank counts to the largest divisor (C=1 input layers etc.)
         cb_n = banking.divisor_banks(c, cfg.cin_banks)
         kb_n = banking.divisor_banks(k, cfg.kout_banks)
-        if cfg.auto_bank:
-            return banking.plan_banks(h, w_, c, k, kh, kw, in_bytes=in_bytes,
-                                      cin_banks=cb_n, kout_banks=kb_n,
-                                      stride=stride, padding=padding)
-        (pt, pb), (pl_, pr) = ref.normalize_padding(padding, kh, kw,
-                                                    stride, h, w_)
-        oh, ow = ref.conv_out_shape(h, w_, kh, kw, stride, padding)
-        cb, kb = c // cb_n, k // kb_n
-        return banking.BankPlan(cb_n, kb_n,
-                                (h + pt + pb) * (w_ + pl_ + pr) * cb * in_bytes,
-                                kh * kw * cb * kb * in_bytes,
-                                oh * ow * kb * 4,
-                                stride=stride, out_h=oh, out_w=ow)
+        return banking.plan_tiles(
+            h, w_, c, k, kh, kw, stride=stride, padding=padding, pool=pool,
+            in_bytes=in_bytes, acc_bytes=4, out_bytes=out_bytes,
+            cin_banks=cb_n, kout_banks=kb_n,
+            vmem_budget=cfg.vmem_budget if cfg.auto_bank else None)
 
     def apply_layer(self, x: jax.Array, w: jax.Array,
                     bias: Optional[jax.Array] = None,
@@ -164,7 +173,8 @@ class ConvCore:
         Fused epilogue order: ReLU → 2×2 max-pool → requantize(out_scale).
         """
         cfg = self.config
-        plan = self.plan(x.shape, w.shape, stride, padding)
+        plan = self.plan(x.shape, w.shape, stride, padding, pool=pool,
+                         out_bytes=1 if out_scale is not None else None)
         if cfg.int8:
             assert x.dtype == jnp.int8 and w.dtype == jnp.int8
         backend = get_backend(cfg.backend)

@@ -9,12 +9,19 @@ jitted multi-layer program over a ``Backend`` (core/convcore.py).
 
 Layer-to-layer int8 chaining (the production path): ``quantize_network``
 calibrates per-layer activation scales from a float forward pass, quantizes
-weights/biases, and computes the *requantization scale* of each layer
-(``s_in·s_w / s_out`` — core/quantize.requant_scale).  The compiled int8
-program then keeps every inter-layer feature map in int8: the fused kernel
-epilogue (ReLU → pool → requantize) writes the next layer's int8 input
-directly, so nothing round-trips HBM in int32 — the FPGA post-processing
-idiom at network scale.
+weights/biases (per-tensor or per-output-channel — ``per_channel=True``
+yields [K] scale vectors the fused epilogue broadcasts), and computes the
+*requantization scale* of each layer (``s_in·s_w / s_out`` —
+core/quantize.requant_scale).  The compiled int8 program then keeps every
+inter-layer feature map in int8: the fused kernel epilogue (ReLU → pool →
+requantize) writes the next layer's int8 input directly, so nothing
+round-trips HBM in int32 — the FPGA post-processing idiom at network scale.
+
+Spatial tiling: ``make_int8_program`` computes a per-layer
+``banking.TilePlan`` (``NetworkPlan.tile_plans``), so conv layers whose
+whole-map working set exceeds the VMEM budget stream through halo'd H/W
+tiles — VGG-small at 64×64+, the ImageNet-scale ``vgg_imagenet`` demo,
+and the segmentation-scale ``large_map`` plan all compile unchanged.
 
 Paper → TPU mapping of the replicated-IP-core mode (full-board 4.48 GOPS):
 core/scheduler.py shards a compiled program across devices (one IP core ↔
@@ -48,9 +55,12 @@ from repro.kernels import ref
 class LayerSpec:
     """One layer of a straight-line CNN.
 
-    kind: "conv" | "pool" | "flatten" | "dense".  ``pool=True`` on a conv
-    layer fuses the 2×2/2 max-pool into the kernel epilogue (one HBM
-    round-trip); a standalone "pool" layer is the unfused fallback."""
+    kind: "conv" | "pool" | "avgpool" | "globalpool" | "flatten" |
+    "dense".  ``pool=True`` on a conv layer fuses the 2×2/2 max-pool into
+    the kernel epilogue (one HBM round-trip); standalone "pool" /
+    "avgpool" layers are the unfused fallbacks, and "globalpool" is the
+    global average pool ([N,H,W,C] → [N,C]) that lets classifier heads
+    skip the flatten + giant-dense pattern."""
     kind: str
     features: int = 0                      # conv: K; dense: output dim
     kernel: Tuple[int, int] = (3, 3)
@@ -58,7 +68,7 @@ class LayerSpec:
     padding: ref.Padding = "SAME"
     relu: bool = False
     pool: bool = False                     # conv only: fused 2×2 max-pool
-    size: int = 2                          # "pool" layers: window/stride
+    size: int = 2                          # "pool"/"avgpool": window/stride
 
 
 def conv(features: int, kernel: int = 3, stride: int = 1,
@@ -70,6 +80,14 @@ def conv(features: int, kernel: int = 3, stride: int = 1,
 
 def maxpool(size: int = 2) -> LayerSpec:
     return LayerSpec("pool", size=size)
+
+
+def avgpool(size: int = 2) -> LayerSpec:
+    return LayerSpec("avgpool", size=size)
+
+
+def global_pool() -> LayerSpec:
+    return LayerSpec("globalpool")
 
 
 def flatten() -> LayerSpec:
@@ -102,15 +120,18 @@ class NetworkPlan:
                     h, w = h // 2, w // 2
                 c = sp.features
                 out.append((h, w, c))
-            elif sp.kind == "pool":
+            elif sp.kind in ("pool", "avgpool"):
                 h, w = (h - sp.size) // sp.size + 1, \
                        (w - sp.size) // sp.size + 1
                 out.append((h, w, c))
+            elif sp.kind == "globalpool":
+                flat = c
+                out.append((flat,))
             elif sp.kind == "flatten":
                 flat = h * w * c
                 out.append((flat,))
             elif sp.kind == "dense":
-                assert flat is not None, "dense before flatten"
+                assert flat is not None, "dense before flatten/globalpool"
                 flat = sp.features
                 out.append((flat,))
             else:
@@ -170,10 +191,13 @@ class NetworkPlan:
                 if sp.pool:
                     h, w = h // 2, w // 2
                 c = sp.features
-            elif sp.kind == "pool":
+            elif sp.kind in ("pool", "avgpool"):
                 h, w = (h - sp.size) // sp.size + 1, \
                        (w - sp.size) // sp.size + 1
-                rows.append((f"pool{i}", 0))
+                rows.append((f"{sp.kind}{i}", 0))
+            elif sp.kind == "globalpool":
+                flat = c
+                rows.append((f"globalpool{i}", 0))
             elif sp.kind == "flatten":
                 flat = h * w * c
                 rows.append((f"flatten{i}", 0))
@@ -182,11 +206,48 @@ class NetworkPlan:
                 flat = sp.features
         return rows
 
+    def tile_plans(self, cin_banks: int = 4, kout_banks: int = 4,
+                   in_bytes: int = 1,
+                   vmem_budget: Optional[int] = banking.VMEM_BYTES
+                   ) -> List[Optional[banking.TilePlan]]:
+        """Per-layer spatial-tile × channel-bank plans (None for layers
+        without a conv).  int8-datapath sizes by default; the final
+        parametric layer (no fused requantize) keeps a 4-byte epilogue
+        output, every other conv writes int8.  ``vmem_budget=None``
+        disables fitting (whole-map tiles — the seed dataflow)."""
+        param_kinds = ("conv", "dense")
+        last_param = max((i for i, sp in enumerate(self.layers)
+                          if sp.kind in param_kinds), default=-1)
+        h, w, c = self.input_shape
+        plans: List[Optional[banking.TilePlan]] = []
+        for i, (sp, out) in enumerate(zip(self.layers,
+                                          self.activation_shapes())):
+            if sp.kind == "conv":
+                kh, kw = sp.kernel
+                plans.append(banking.plan_tiles(
+                    h, w, c, sp.features, kh, kw, stride=sp.stride,
+                    padding=sp.padding, pool=sp.pool, in_bytes=in_bytes,
+                    out_bytes=4 if i == last_param else in_bytes,
+                    cin_banks=banking.divisor_banks(c, cin_banks),
+                    kout_banks=banking.divisor_banks(sp.features,
+                                                     kout_banks),
+                    vmem_budget=vmem_budget))
+            else:
+                plans.append(None)
+            if len(out) == 3:
+                h, w, c = out
+        return plans
+
     def perf_report(self, cfg: perfmodel.IPCoreConfig =
-                    perfmodel.IPCoreConfig()) -> dict:
+                    perfmodel.IPCoreConfig(),
+                    tile_plans: Optional[Sequence] = None) -> dict:
         """The §5.2 cycle model summed over the network, including the
-        20-core full-board configuration (perfmodel.network_report)."""
-        return perfmodel.network_report(self.psum_table(), cfg)
+        20-core full-board configuration (perfmodel.network_report).
+        With ``tile_plans`` (e.g. from :meth:`tile_plans`) the model also
+        prices tile revisits and halo re-reads against the DMA interface,
+        keeping large-map GOPS honest."""
+        return perfmodel.network_report(self.psum_table(), cfg,
+                                        tile_plans=tile_plans)
 
     def forward_activations(self, params: Sequence[Optional[dict]],
                             x: jax.Array):
@@ -200,6 +261,10 @@ class NetworkPlan:
                     relu=sp.relu, pool=sp.pool)
             elif sp.kind == "pool":
                 x = ref.maxpool2d_ref(x, sp.size)
+            elif sp.kind == "avgpool":
+                x = ref.avgpool2d_ref(x, sp.size)
+            elif sp.kind == "globalpool":
+                x = ref.global_avgpool_ref(x)
             elif sp.kind == "flatten":
                 x = x.reshape(x.shape[0], -1)
             elif sp.kind == "dense":
@@ -223,27 +288,50 @@ class NetworkPlan:
 # ---------------------------------------------------------------------------
 
 
+def program_tile_plans(plan: NetworkPlan, core_config) -> List:
+    """The per-layer TilePlans a ``make_int8_program`` compile would run
+    under ``core_config`` — the single derivation shared by the compiler
+    and by benchmark/perf reporting, so reported tiling stats always
+    describe the plans that actually executed."""
+    return plan.tile_plans(
+        cin_banks=core_config.cin_banks,
+        kout_banks=core_config.kout_banks, in_bytes=1,
+        vmem_budget=(core_config.vmem_budget if core_config.auto_bank
+                     else None))
+
+
 @dataclass(frozen=True)
 class QuantizedNetwork:
     """A NetworkPlan lowered to the 8-bit datapath.
 
     Per parametric layer i: int8 weights, int32 bias (at scale
     ``s_in·s_w``), and the requantization scale putting the int32
-    accumulator on the NEXT layer's int8 grid.  The final parametric layer
-    keeps ``requant=None`` and the program dequantizes its accumulator with
-    ``out_dequant`` (logits want full precision)."""
+    accumulator on the NEXT layer's int8 grid.  With per-channel (kout)
+    weight scales the bias, requant, and dequant entries are [K] vectors —
+    the kernel epilogue broadcasts them over the last axis.  The final
+    parametric layer keeps ``requant=None`` and the program dequantizes
+    its accumulator with ``out_dequant`` (logits want full precision)."""
     plan: NetworkPlan
     weights: Tuple[Optional[jax.Array], ...]       # int8
     biases: Tuple[Optional[jax.Array], ...]        # int32
-    requants: Tuple[Optional[jax.Array], ...]      # f32 scalars
+    requants: Tuple[Optional[jax.Array], ...]      # f32 scalar or [K]
     in_scale: jax.Array                            # input activation scale
     out_dequant: jax.Array                         # final accumulator scale
+    per_channel: bool = False                      # kout-bank weight scales
 
 
 def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
-                     calib_x: jax.Array) -> QuantizedNetwork:
+                     calib_x: jax.Array,
+                     per_channel: bool = False) -> QuantizedNetwork:
     """Calibrate activation scales with a float forward pass and lower every
-    parametric layer to int8 (per-tensor symmetric weights)."""
+    parametric layer to int8 (symmetric weights).
+
+    ``per_channel=True`` calibrates one weight scale per output channel
+    (kout bank) instead of per tensor: conv kernels reduce over
+    (KH, KW, C), dense weights over the contraction dim, yielding [K]
+    scale vectors that ride the fused requantize epilogue end-to-end —
+    the per-channel refinement the paper's per-kernel-set BRAM layout
+    makes natural."""
     last_param = max(i for i, sp in enumerate(plan.layers)
                      if sp.kind in ("conv", "dense"))
     s_act = act_scale_from_calibration(calib_x)
@@ -254,11 +342,20 @@ def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
     out_dequant = jnp.float32(1.0)
     for i, sp, p, x in plan.forward_activations(params, calib_x):
         if sp.kind not in ("conv", "dense"):
-            # pool/flatten are monotone/shape-only: the int8 scale carries
+            # pooling/flatten are monotone/shape-only: the int8 scale
+            # carries (avg-pool stays on the same grid — the mean of
+            # same-scale values rounds back onto it)
             weights.append(None); biases.append(None); requants.append(None)
             continue
-        wq = quantize_symmetric(p["w"])
-        acc_scale = s_act * wq.scale                  # int32 psum units
+        if per_channel:
+            # reduce over everything but the output-channel axis → [K]
+            wq = quantize_symmetric(p["w"],
+                                    axis=tuple(range(p["w"].ndim - 1)))
+            w_scale = wq.scale.reshape(-1)
+        else:
+            wq = quantize_symmetric(p["w"])
+            w_scale = wq.scale
+        acc_scale = s_act * w_scale                   # int32 psum units
         weights.append(wq.values)
         biases.append(jnp.round(p["b"] / acc_scale).astype(jnp.int32))
         if i == last_param:
@@ -266,44 +363,54 @@ def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
             out_dequant = acc_scale
         else:
             s_next = act_scale_from_calibration(x)
-            requants.append(requant_scale(s_act, wq.scale, s_next))
+            requants.append(requant_scale(s_act, w_scale, s_next))
             s_act = s_next
     return QuantizedNetwork(plan, tuple(weights), tuple(biases),
-                            tuple(requants), in_scale, out_dequant)
+                            tuple(requants), in_scale, out_dequant,
+                            per_channel=per_channel)
 
 
 def make_int8_program(qnet: QuantizedNetwork,
-                      core_config: ConvCoreConfig = ConvCoreConfig(int8=True)):
+                      core_config: ConvCoreConfig = ConvCoreConfig(int8=True),
+                      tile_plans: Optional[Sequence] = None):
     """Compile the quantized network into one jitted program
     x_f32 [N,H,W,C] → logits_f32 [N,classes].
 
     Conv layers run through the backend with the FULL fused epilogue
-    (ReLU → pool → requantize in-VMEM); every inter-layer tensor is int8.
-    Dense accumulators requantize inline (the GEMM epilogue is a cheap
-    elementwise op XLA fuses into the kernel's consumer)."""
+    (ReLU → pool → requantize in-VMEM) under a per-layer TilePlan — maps
+    larger than the VMEM budget stream through halo'd spatial tiles, so
+    VGG-small at 64×64+ inputs and ImageNet-scale plans compile; every
+    inter-layer tensor is int8.  Dense accumulators requantize inline
+    (the GEMM epilogue is a cheap elementwise op XLA fuses into the
+    kernel's consumer).
+
+    ``tile_plans`` overrides the per-layer plans (one entry per layer,
+    None for non-conv) — pass ``program_tile_plans(qnet.plan,
+    core_config)`` to share the exact plans with reporting code."""
     backend = get_backend(core_config.backend)
     plan = qnet.plan
-
-    def bank(c: int, k: int) -> banking.BankPlan:
-        return banking.BankPlan(
-            banking.divisor_banks(c, core_config.cin_banks),
-            banking.divisor_banks(k, core_config.kout_banks), 0, 0, 0)
+    if tile_plans is None:
+        tile_plans = program_tile_plans(plan, core_config)
 
     def program(x: jax.Array) -> jax.Array:
         h = jnp.clip(jnp.round(x.astype(jnp.float32) / qnet.in_scale),
                      -128, 127).astype(jnp.int8)
-        for sp, w, b, rq in zip(plan.layers, qnet.weights, qnet.biases,
-                                qnet.requants):
+        for sp, w, b, rq, tp in zip(plan.layers, qnet.weights, qnet.biases,
+                                    qnet.requants, tile_plans):
             if sp.kind == "conv":
                 h = backend.conv(h, w, b, stride=sp.stride,
                                  padding=sp.padding, relu=sp.relu,
-                                 pool=sp.pool, out_scale=rq,
-                                 plan=bank(h.shape[-1], w.shape[-1]))
+                                 pool=sp.pool, out_scale=rq, plan=tp)
                 if rq is None:                       # final conv: dequantize
                     h = h.astype(jnp.float32) * qnet.out_dequant
             elif sp.kind == "pool":
                 # max-pool commutes with the monotone int8 mapping
                 h = ref.maxpool2d_ref(h, sp.size)
+            elif sp.kind == "avgpool":
+                # window mean rounds back onto the same int8 grid
+                h = ref.avgpool2d_ref(h, sp.size)
+            elif sp.kind == "globalpool":
+                h = ref.global_avgpool_ref(h)
             elif sp.kind == "flatten":
                 h = h.reshape(h.shape[0], -1)
             elif sp.kind == "dense":
@@ -344,7 +451,8 @@ def lenet(input_shape: Tuple[int, int, int] = (28, 28, 1),
 def vgg_small(input_shape: Tuple[int, int, int] = (32, 32, 4),
               classes: int = 10) -> NetworkPlan:
     """VGG-style stacked 3×3 blocks (conv-conv-pool), the shape class the
-    paper's full-board replication mode targets."""
+    paper's full-board replication mode targets.  With 64×64+ inputs the
+    per-layer TilePlans stream the early maps through spatial tiles."""
     return NetworkPlan(
         name="vgg_small", input_shape=input_shape,
         layers=(
@@ -353,5 +461,42 @@ def vgg_small(input_shape: Tuple[int, int, int] = (32, 32, 4),
             conv(64, relu=True, pool=True),
             flatten(),
             dense(128, relu=True),
+            dense(classes),
+        ))
+
+
+def vgg_imagenet(input_shape: Tuple[int, int, int] = (224, 224, 4),
+                 classes: int = 1000) -> NetworkPlan:
+    """ImageNet-scale demo: a VGG-style pyramid over 224×224 inputs whose
+    classifier head is a global average pool + one dense layer (no
+    flatten + giant GEMM).  Early layers exceed the whole-map VMEM budget
+    and compile onto halo'd spatial tiles."""
+    return NetworkPlan(
+        name="vgg_imagenet", input_shape=input_shape,
+        layers=(
+            conv(32, relu=True), conv(32, relu=True, pool=True),   # 112
+            conv(64, relu=True, pool=True),                        # 56
+            conv(128, relu=True, pool=True),                       # 28
+            conv(256, relu=True, pool=True),                       # 14
+            conv(256, relu=True),
+            global_pool(),
+            dense(classes),
+        ))
+
+
+def large_map(input_shape: Tuple[int, int, int] = (512, 512, 16),
+              classes: int = 4) -> NetworkPlan:
+    """Segmentation-scale feature maps: the 512×512×16 first layer's
+    whole-map working set exceeds the VMEM budget, so this plan only runs
+    through the spatially-tiled kernel — the workload class the seed
+    dataflow could not express."""
+    return NetworkPlan(
+        name="large_map", input_shape=input_shape,
+        layers=(
+            conv(64, relu=True, pool=True),                        # 256
+            conv(32, stride=2, relu=True, pool=True),              # 64
+            conv(32, stride=2, relu=True),                         # 32
+            avgpool(2),                                            # 16
+            global_pool(),
             dense(classes),
         ))

@@ -14,8 +14,9 @@ numbers are comparable with TPU rooflines (DESIGN.md §3).
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.kernels.ref import conv_out_shape
 
@@ -27,6 +28,7 @@ class IPCoreConfig:
     pcores_per_core: int = 4       # kernels in flight per core (M2)
     cycles_per_batch: int = 8      # "four psum values for each eight cycles"
     ip_cores: int = 1              # replicated IP cores on the fabric
+    dma_bytes_per_cycle: float = 8.0   # 64-bit DDR/AXI interface (shared)
 
 
 def psum_count(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
@@ -81,20 +83,71 @@ def network_cycles(layer_psums: Sequence[int],
     return sum(cycles(p, cfg) for p in layer_psums if p)
 
 
+def tile_traffic(plan) -> dict:
+    """DMA traffic of one layer pass under a ``banking.TilePlan``.
+
+    Every kout bank revisits every spatial tile (the weight-stationary
+    sweep re-DMAs the halo'd input window per kernel set), so
+
+        input bytes  = n_tiles · cin_banks · image_block · kout_banks
+        weight bytes = n_tiles · cin_banks · kout_banks · weight_block
+        output bytes = n_tiles · kout_banks · output_block
+
+    The halo_read_factor isolates the pure halo/zero-extension overhead
+    vs a single whole-map read."""
+    in_b = plan.n_tiles * plan.cin_banks * plan.image_block_bytes \
+        * plan.kout_banks
+    w_b = plan.n_tiles * plan.cin_banks * plan.kout_banks \
+        * plan.weight_block_bytes
+    out_b = plan.n_tiles * plan.kout_banks * plan.output_block_bytes
+    return {"input_bytes": in_b, "weight_bytes": w_b,
+            "output_bytes": out_b, "total_bytes": in_b + w_b + out_b,
+            "halo_read_factor": plan.halo_read_factor,
+            "kout_revisits": plan.kout_banks}
+
+
+def dma_cycles(total_bytes: int, cfg: IPCoreConfig = IPCoreConfig()) -> int:
+    return math.ceil(total_bytes / max(cfg.dma_bytes_per_cycle, 1e-9))
+
+
 def network_report(layers: Sequence[Tuple[str, int]],
                    cfg: IPCoreConfig = IPCoreConfig(),
-                   full_board_cores: int = 20) -> dict:
+                   full_board_cores: int = 20,
+                   tile_plans: Optional[Sequence] = None) -> dict:
     """Per-layer + total cycles/seconds/GOPS for a layer list
     [(name, psums_per_image), ...], for ``cfg`` and for the paper's
-    full-board configuration (ip_cores=20, batch-sharded replication)."""
+    full-board configuration (ip_cores=20, batch-sharded replication).
+
+    ``tile_plans`` (one ``banking.TilePlan`` or None per layer, e.g. from
+    ``NetworkPlan.tile_plans``) adds the spatial-tiling DMA cost: each
+    layer's cycles become max(compute, DMA) — the M4 load/compute
+    pipeline overlaps the two — with tile revisits and halo re-reads
+    priced by ``tile_traffic``.  The DMA interface is SHARED across
+    replicated IP cores, so full-board cycles floor at the same DMA time:
+    that is what keeps the 20-core GOPS honest on large maps."""
     board = replace(cfg, ip_cores=full_board_cores)
+    if tile_plans is None:
+        tile_plans = [None] * len(layers)
     per_layer: List[dict] = []
-    for name, p in layers:
-        per_layer.append({"name": name, "psums": p,
-                          "cycles": cycles(p, cfg) if p else 0})
+    total = total_board = 0
+    for (name, p), tp in zip(layers, tile_plans):
+        compute = cycles(p, cfg) if p else 0
+        compute_board = cycles(p, board) if p else 0
+        row = {"name": name, "psums": p, "cycles": compute}
+        if tp is not None:
+            traffic = tile_traffic(tp)
+            dma = dma_cycles(traffic["total_bytes"], cfg)
+            row.update(dma_bytes=traffic["total_bytes"], dma_cycles=dma,
+                       halo_read_factor=traffic["halo_read_factor"],
+                       n_tiles=tp.n_tiles,
+                       cycles=max(compute, dma) if p else dma)
+            total += row["cycles"]
+            total_board += max(compute_board, dma) if p else dma
+        else:
+            total += compute
+            total_board += compute_board
+        per_layer.append(row)
     total_psums = sum(p for _, p in layers)
-    total = network_cycles([p for _, p in layers], cfg)
-    total_board = network_cycles([p for _, p in layers], board)
     return {
         "layers": per_layer,
         "psums": total_psums,

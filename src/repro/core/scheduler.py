@@ -19,8 +19,18 @@ forms, and both have exact TPU analogues:
   an all-gather).  Implemented as a ``Backend`` decorator so any network
   program compiles against it unchanged.
 
-``perfmodel.network_report`` prices both: cycles scale ~1/n_cores until a
-layer's psum count no longer fills all cores.
+* **spatial sharding** (this PR's third axis): every conv layer's output
+  ROWS are split across cores; each core receives a halo'd horizontal
+  band of the input map (halo = kernel extent − stride, the same overlap
+  math as the tiled kernel's BlockSpecs) and convolves it with the FULL
+  kernel set — the paper's fixed-size image BRAMs replicated across the
+  fabric, each holding one band of a map too large for any single core.
+  Bands are pool-aligned so the fused 2×2 epilogue never straddles a
+  band edge; single-image latency mode, like kout.
+
+``perfmodel.network_report`` prices them: cycles scale ~1/n_cores until a
+layer's psum count no longer fills all cores, and tile/halo re-reads are
+charged against the DMA interface.
 """
 
 from __future__ import annotations
@@ -32,12 +42,13 @@ import jax.numpy as jnp
 
 from repro.core.banking import divisor_banks
 from repro.core.convcore import Backend, get_backend
+from repro.kernels.ref import conv_out_shape, halo_window, normalize_padding
 
 
 @dataclass(frozen=True)
 class SchedulerConfig:
     n_cores: int = 1
-    mode: str = "batch"                 # "batch" | "kout"
+    mode: str = "batch"                 # "batch" | "kout" | "spatial"
 
 
 class KoutShardedBackend:
@@ -89,29 +100,85 @@ class KoutShardedBackend:
         return jnp.concatenate(outs, axis=-1)
 
 
+class SpatialShardedBackend:
+    """Backend decorator: split every conv's output rows into ``n_cores``
+    halo'd horizontal bands, one per virtual IP core, and concatenate.
+
+    Band i computing conv-output rows [oy0, oy1) reads padded-input rows
+    [oy0·s, (oy1−1)·s + kh) — adjacent bands overlap by the same
+    ``kh − s`` halo the tiled kernel's BlockSpecs re-read.  The overlap
+    is materialized by slicing the unpadded map and converting the
+    residual margins to per-band explicit padding, so each band is an
+    ordinary conv the inner backend (and its own TilePlan) handles.
+    Bands are pool-aligned: with the fused 2×2 epilogue, band boundaries
+    sit on even output rows so no pool window straddles cores."""
+
+    def __init__(self, inner: Backend, n_cores: int):
+        self.inner = inner
+        self.n_cores = n_cores
+        self.name = f"{inner.name}@spatial{n_cores}"
+
+    def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
+             pool=False, plan=None, **kw):
+        n, h, w_dim, c = x.shape
+        kh, kw_ = w.shape[:2]
+        (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw_, stride,
+                                                h, w_dim)
+        oh, _ = conv_out_shape(h, w_dim, kh, kw_, stride, padding)
+        if pool:
+            oh = (oh // 2) * 2           # floor semantics, like the kernel
+        unit = 2 if pool else 1          # pool-aligned band boundaries
+        rows = oh // unit
+        shards = min(self.n_cores, rows)
+        if shards <= 1:
+            return self.inner.conv(x, w, bias, stride=stride,
+                                   padding=padding, pool=pool, plan=plan,
+                                   **kw)
+        # balanced unit split: the first (rows % shards) bands get one more
+        base, rem = divmod(rows, shards)
+        outs, oy0 = [], 0
+        for i in range(shards):
+            oy1 = oy0 + (base + (1 if i < rem else 0)) * unit
+            a = oy0 * stride - pt        # input rows, unpadded coordinates
+            b_ = a + halo_window(oy1 - oy0, stride, kh)
+            lo, hi = max(a, 0), min(b_, h)
+            outs.append(self.inner.conv(
+                x[:, lo:hi], w, bias, stride=stride,
+                padding=((lo - a, b_ - hi), (pl_, pr)), pool=pool,
+                plan=plan, **kw))
+            oy0 = oy1
+        return jnp.concatenate(outs, axis=1)
+
+    def matmul(self, x, w, bias=None):
+        return self.inner.matmul(x, w, bias)
+
+
 class MultiCoreScheduler:
     """Run a compiled network program as if on ``n_cores`` replicated IP
     cores."""
 
     def __init__(self, config: SchedulerConfig = SchedulerConfig()):
-        assert config.mode in ("batch", "kout"), config.mode
+        assert config.mode in ("batch", "kout", "spatial"), config.mode
         self.config = config
 
     def shard_backend(self, backend_name: str) -> Backend:
-        """kout mode: a Backend whose every layer is kernel-set-sharded."""
-        return KoutShardedBackend(get_backend(backend_name),
-                                  self.config.n_cores)
+        """kout / spatial modes: a Backend whose every conv layer is
+        kernel-set- or row-band-sharded across the virtual cores."""
+        inner = get_backend(backend_name)
+        if self.config.mode == "spatial":
+            return SpatialShardedBackend(inner, self.config.n_cores)
+        return KoutShardedBackend(inner, self.config.n_cores)
 
     def run(self, program, x: jax.Array) -> jax.Array:
-        """batch mode: split the batch over cores.  kout mode: pass
-        through — the cores divide kernels inside the program (compile it
-        against ``shard_backend``), not the batch.
+        """batch mode: split the batch over cores.  kout / spatial modes:
+        pass through — the cores divide kernels or row bands inside the
+        program (compile it against ``shard_backend``), not the batch.
 
         With enough local devices, one device per IP core (NamedSharding +
         GSPMD); otherwise vmapped virtual cores on one device."""
         cores = self.config.n_cores
         n = x.shape[0]
-        if cores == 1 or self.config.mode == "kout":
+        if cores == 1 or self.config.mode in ("kout", "spatial"):
             return program(x)
         assert n % cores == 0, (n, cores)
         if jax.device_count() >= cores:

@@ -1,12 +1,17 @@
 """The paper's IP core as a Pallas TPU kernel: weight-stationary, channel-
 banked, bias-preloaded blocked convolution with a fused post-processing
-epilogue.
+epilogue — and spatially tiled, so feature maps larger than VMEM stream
+through halo'd H/W blocks.
 
 Mapping of the FPGA architecture (DESIGN.md §3):
 
-* grid = (N, kout_banks, cin_banks) — co innermost: "PSUM values of each
-  core get accumulated continually into the output BRAMs until the
-  processing depth is finished" (§4.2), then the next kernel set (ko).
+* grid = (N, h_tiles, w_tiles, kout_banks, cin_banks) — co innermost:
+  "PSUM values of each core get accumulated continually into the output
+  BRAMs until the processing depth is finished" (§4.2), then the next
+  kernel set (ko), then the next spatial tile.  Spatial tiles are the
+  paper's fixed-size image BRAMs generalized: the FPGA streams a bounded
+  window of the map through BRAM; here each grid step DMAs one halo'd
+  window of the padded map into VMEM;
 * the weight block (the Weight Loader contents) is VMEM-resident for the
   whole spatial sweep of a grid step — weight-stationary;
 * the accumulator is a VMEM scratch block (the output BRAMs), revisited
@@ -23,6 +28,31 @@ Mapping of the FPGA architecture (DESIGN.md §3):
   MXU compute across grid steps — the paper's two-stage load/compute
   pipeline (M4).
 
+Tiling dataflow and halo math
+-----------------------------
+An output tile of ``h_tile × w_tile`` conv-output pixels at tile index
+(ty, tx) consumes the padded-input window starting at element
+``(ty·h_tile·s, tx·w_tile·s)`` with extent
+
+    in_tile = (tile − 1)·s + k        (per spatial dim, s = stride)
+
+so adjacent input windows overlap by a halo of ``k − s`` rows/columns
+(k − 1 for the stride-1 case) — re-read from HBM per tile, exactly like
+the FPGA re-DMAs the boundary rows of its image BRAM window.  The input
+BlockSpec uses element-granularity (Unblocked) indexing because halo'd
+windows overlap: block strides (h_tile·s) differ from block extents
+(in_tile).  The padded map is extended with extra zero rows/columns on
+the bottom/right so the LAST tile's window is always in bounds; the
+correspondingly padded output rows are sliced off after the call.
+
+The fused epilogue is tile-local: with ``pool=True`` tile sizes must be
+even (pool-aligned) so no 2×2 pool window straddles a tile edge — tile
+boundaries then land on pool-window boundaries and tiled pooling equals
+whole-map pooling.  core/banking.plan_tiles chooses (h_tile, w_tile,
+cin_banks, kout_banks) jointly so the true VMEM working set (halo'd
+input block + weight block + accumulator scratch + epilogue output
+block, with pipeline double-buffering) fits the budget.
+
 Padding is materialized by zero-padding the feature map before the kernel
 (the FPGA writes zero margins into the image BRAMs); zero padding is exact
 for the symmetric zero-point-0 int8 scheme.
@@ -32,10 +62,6 @@ paper's 8-bit datapath).  With ``out_scale`` the epilogue requantizes to
 int8 in-kernel, so chained layers never round-trip int32 through HBM.  The
 bit-exact wrap-around-in-8-bit mode of the Fig. 6 waveform lives in
 ops.conv2d (wrap8=True) on top of the int32 result.
-
-Spatial extent is kept whole per block (edge-size feature maps fit VMEM
-comfortably: 224×224×Cb int8 ≈ 0.4 MiB/bank); banking.py checks the VMEM
-budget and picks bank counts for larger maps.
 """
 
 from __future__ import annotations
@@ -47,15 +73,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ref import conv_out_shape, normalize_padding
+from repro.kernels.ref import conv_out_shape, halo_window, normalize_padding
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
                  kw: int, stride: int, cin_banks: int, relu: bool,
                  pool: bool, requant: bool, acc_dtype):
-    co = pl.program_id(2)
+    co = pl.program_id(4)
 
-    oh, ow, kb = acc_ref.shape
+    th, tw, kb = acc_ref.shape
     cb = x_ref.shape[3]
 
     # M5: bias preload — initialize the accumulator with the bias on the
@@ -65,31 +91,33 @@ def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
         acc_ref[...] = jnp.broadcast_to(
             b_ref[...].astype(acc_dtype), acc_ref.shape)
 
-    acc = acc_ref[...]                                 # [OH, OW, KB]
-    x = x_ref[0]                                       # [Hp, Wp, CB]
+    acc = acc_ref[...]                                 # [TH, TW, KB]
+    x = x_ref[0]                                       # [in_th, in_tw, CB]
     # KH×KW shifted matmuls — the 9-MAC adder tree on the MXU; stride-s
     # output pixels read every s-th input row/column of the shifted slab
     for dy in range(kh):
         for dx in range(kw):
             xs = jax.lax.slice(
                 x, (dy, dx, 0),
-                (dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, cb),
-                (stride, stride, 1)).reshape(oh * ow, cb)
+                (dy + (th - 1) * stride + 1, dx + (tw - 1) * stride + 1, cb),
+                (stride, stride, 1)).reshape(th * tw, cb)
             wk = w_ref[dy, dx]                         # [CB, KB]
             acc = acc + jnp.dot(
                 xs, wk, preferred_element_type=acc_dtype
-            ).reshape(oh, ow, kb)
+            ).reshape(th, tw, kb)
     acc_ref[...] = acc
 
     # Fused epilogue on the last cin step: the FPGA post-processes the
     # output BRAMs (activation, pooling, requantization) before writeback.
+    # Tile-local: pool-aligned tiles guarantee no 2×2 window straddles a
+    # tile edge, so per-tile pooling == whole-map pooling.
     @pl.when(co == cin_banks - 1)
     def _epilogue():
         y = acc_ref[...]
         if relu:
             y = jnp.maximum(y, 0)
         if pool:
-            y = jnp.max(y.reshape(oh // 2, 2, ow // 2, 2, kb), axis=(1, 3))
+            y = jnp.max(y.reshape(th // 2, 2, tw // 2, 2, kb), axis=(1, 3))
         if requant:
             y = jnp.clip(jnp.round(y.astype(jnp.float32) * s_ref[...]),
                          -128, 127)
@@ -97,13 +125,14 @@ def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "cin_banks", "kout_banks", "relu", "pool",
-    "interpret"))
+    "stride", "padding", "cin_banks", "kout_banks", "h_tile", "w_tile",
+    "relu", "pool", "interpret"))
 def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
               padding="VALID", cin_banks: int = 4, kout_banks: int = 4,
-              relu: bool = False, pool: bool = False,
-              interpret: bool = False):
-    """Generalized paper-dataflow convolution with fused epilogue.
+              h_tile: int = 0, w_tile: int = 0, relu: bool = False,
+              pool: bool = False, interpret: bool = False):
+    """Generalized paper-dataflow convolution with fused epilogue and
+    halo-aware spatial tiling.
 
     x: [N,H,W,C]; w: [KH,KW,C,K]; bias: [K] or None → [N,OH,OW,K]
     (f32 accumulate for float inputs, int32 for int8 inputs).
@@ -113,6 +142,13 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
     cin step, in this order): ``relu``, ``pool`` (2×2/2 max-pool, floor
     semantics), ``out_scale`` (requantize to int8; scalar or per-channel
     [K]).
+
+    h_tile / w_tile: conv-output tile extents (pre-pool pixels).  0 means
+    "whole map" (one spatial tile — the seed dataflow).  Tiles need not
+    divide the output: the trailing tile is computed on zero-extended
+    input and sliced off.  With ``pool=True`` tile sizes must be even so
+    pool windows never straddle tile edges.  core/banking.plan_tiles
+    picks sizes that fit the VMEM budget.
 
     cin_banks/kout_banks default to the paper's 4×4 banking; C and K must
     divide by them (the paper's divisible-by-4 invariant, §4.1).
@@ -124,16 +160,36 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
         "paper banking invariant: C and K divisible by the bank counts")
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
                                             h, w_dim)
-    if pt or pb or pl_ or pr:
-        # zero margins written into the image BRAMs (exact for zero-point-0)
-        x = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
-    hp, wp = h + pt + pb, w_dim + pl_ + pr
     oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
     if pool:
         assert oh >= 2 and ow >= 2, "2×2 pool needs a ≥2×2 conv output"
         oh, ow = (oh // 2) * 2, (ow // 2) * 2     # floor semantics
+    th = oh if h_tile in (0, None) else min(h_tile, oh)
+    tw = ow if w_tile in (0, None) else min(w_tile, ow)
+    if pool:
+        assert th % 2 == 0 and tw % 2 == 0, (
+            "pool-aligned tiles required: 2×2 windows must not straddle "
+            "tile edges", th, tw)
+    n_th, n_tw = -(-oh // th), -(-ow // tw)
+    tiled = (th, tw) != (oh, ow)
+    # halo'd input window per tile: (tile-1)·s + k, overlapping by k − s
+    in_th = halo_window(th, stride, kh)
+    in_tw = halo_window(tw, stride, kw)
+    hp, wp = h + pt + pb, w_dim + pl_ + pr
+    # extend the padded map so the LAST tile's window is in bounds; the
+    # matching garbage output rows/cols are sliced off below
+    extra_h = max(0, (n_th - 1) * th * stride + in_th - hp)
+    extra_w = max(0, (n_tw - 1) * tw * stride + in_tw - wp)
+    if pt or pb or pl_ or pr or extra_h or extra_w:
+        # zero margins written into the image BRAMs (exact for zero-point-0)
+        x = jnp.pad(x, ((0, 0), (pt, pb + extra_h), (pl_, pr + extra_w),
+                        (0, 0)))
+    hp, wp = hp + extra_h, wp + extra_w
+    if pool:
+        pth, ptw = th // 2, tw // 2
         poh, pow_ = oh // 2, ow // 2
     else:
+        pth, ptw = th, tw
         poh, pow_ = oh, ow
     cb, kb = c // cin_banks, k // kout_banks
 
@@ -149,22 +205,38 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
         jnp.asarray(1.0 if out_scale is None else out_scale, jnp.float32),
         (k,))
 
+    if tiled:
+        # overlapping halo'd windows: element-granularity indexing (block
+        # stride th·s ≠ block extent in_th)
+        x_spec = pl.BlockSpec(
+            (1, in_th, in_tw, cb),
+            lambda b, ty, tx, ko, co: (b, ty * th * stride,
+                                       tx * tw * stride, co * cb),
+            indexing_mode=pl.unblocked)
+    else:
+        x_spec = pl.BlockSpec((1, hp, wp, cb),
+                              lambda b, ty, tx, ko, co: (b, 0, 0, co))
+
     kernel = functools.partial(
         _conv_kernel, kh=kh, kw=kw, stride=stride, cin_banks=cin_banks,
         relu=relu, pool=pool, requant=requant, acc_dtype=acc_dtype)
     out = pl.pallas_call(
         kernel,
-        grid=(n, kout_banks, cin_banks),
+        grid=(n, n_th, n_tw, kout_banks, cin_banks),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, cb), lambda b, ko, co: (b, 0, 0, co)),
-            pl.BlockSpec((kh, kw, cb, kb), lambda b, ko, co: (0, 0, co, ko)),
-            pl.BlockSpec((kb,), lambda b, ko, co: (ko,)),
-            pl.BlockSpec((kb,), lambda b, ko, co: (ko,)),
+            x_spec,
+            pl.BlockSpec((kh, kw, cb, kb),
+                         lambda b, ty, tx, ko, co: (0, 0, co, ko)),
+            pl.BlockSpec((kb,), lambda b, ty, tx, ko, co: (ko,)),
+            pl.BlockSpec((kb,), lambda b, ty, tx, ko, co: (ko,)),
         ],
-        out_specs=pl.BlockSpec((1, poh, pow_, kb),
-                               lambda b, ko, co: (b, 0, 0, ko)),
-        out_shape=jax.ShapeDtypeStruct((n, poh, pow_, k), out_dtype),
-        scratch_shapes=[pltpu.VMEM((oh, ow, kb), acc_dtype)],
+        out_specs=pl.BlockSpec((1, pth, ptw, kb),
+                               lambda b, ty, tx, ko, co: (b, ty, tx, ko)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, n_th * pth, n_tw * ptw, k), out_dtype),
+        scratch_shapes=[pltpu.VMEM((th, tw, kb), acc_dtype)],
         interpret=interpret,
     )(x, w, bias, scale)
+    if (n_th * pth, n_tw * ptw) != (poh, pow_):
+        out = out[:, :poh, :pow_]
     return out

@@ -62,10 +62,12 @@ matmul_ws.defvjp(_matmul_fwd, _matmul_bwd)
 
 
 def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
-           cin_banks: int = 4, kout_banks: int = 4, relu: bool = False,
-           pool: bool = False, wrap8: bool = False, out_scale=None):
+           cin_banks: int = 4, kout_banks: int = 4, h_tile: int = 0,
+           w_tile: int = 0, relu: bool = False, pool: bool = False,
+           wrap8: bool = False, out_scale=None):
     """Paper-dataflow convolution (arbitrary stride / SAME|VALID|explicit
-    padding, fused ReLU → 2×2 max-pool → requantize epilogue).
+    padding, fused ReLU → 2×2 max-pool → requantize epilogue, halo-aware
+    spatial tiling via h_tile/w_tile — 0 = whole map).
 
     float in → f32 out; int8 in → int32 out, then
       * wrap8=True: wrap to int8 (bit-matches the paper's Fig. 6 waveform),
@@ -75,7 +77,8 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     fused_scale = out_scale if (x.dtype == jnp.int8 and not wrap8) else None
     out = _conv_mod.conv2d_ws(x, w, bias, fused_scale, stride=stride,
                               padding=padding, cin_banks=cin_banks,
-                              kout_banks=kout_banks, relu=relu, pool=pool,
+                              kout_banks=kout_banks, h_tile=h_tile,
+                              w_tile=w_tile, relu=relu, pool=pool,
                               interpret=_interpret())
     if x.dtype == jnp.int8 and wrap8:
         return out.astype(jnp.int8)

@@ -47,6 +47,14 @@ def conv_out_shape(h: int, w: int, kh: int, kw: int, stride: int = 1,
             (w + pl_ + pr - kw) // stride + 1)
 
 
+def halo_window(tile: int, stride: int, k: int) -> int:
+    """Input extent consumed by ``tile`` contiguous conv outputs: adjacent
+    windows overlap by ``k − stride`` (the halo).  The single definition
+    shared by the tiled kernel's BlockSpecs, the TilePlan planner, and the
+    spatial-shard band math — they must never disagree on this."""
+    return (tile - 1) * stride + k
+
+
 def conv2d_ref(x, w, bias=None, *, stride: int = 1,
                padding: Padding = "VALID", accum_dtype=jnp.float32):
     """General convolution oracle.  x: [N,H,W,C]; w: [KH,KW,C,K] → [N,OH,OW,K].
@@ -91,6 +99,40 @@ def maxpool2d_ref(x, size: int = 2, stride: int = None):
     return jax.lax.reduce_window(
         x, jnp.asarray(init, x.dtype), jax.lax.max,
         (1, size, size, 1), (1, stride, stride, 1), "VALID")
+
+
+def avgpool2d_ref(x, size: int = 2, stride: int = None):
+    """Average pool over [N,H,W,C] (floor semantics, like maxpool2d_ref).
+
+    Integer inputs accumulate the window sum in int32 and round the mean
+    back to the input dtype — the int8 feature-map grid is preserved
+    (mean of same-scale values stays on the same scale), so the unfused
+    int8 avg-pool layer needs no requantization."""
+    stride = size if stride is None else stride
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        s = jax.lax.reduce_window(
+            x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
+            (1, size, size, 1), (1, stride, stride, 1), "VALID")
+        mean = jnp.round(s.astype(jnp.float32) / (size * size))
+        info = jnp.iinfo(x.dtype)
+        return jnp.clip(mean, info.min, info.max).astype(x.dtype)
+    s = jax.lax.reduce_window(
+        x.astype(jnp.float32), jnp.float32(0), jax.lax.add,
+        (1, size, size, 1), (1, stride, stride, 1), "VALID")
+    return (s / (size * size)).astype(x.dtype)
+
+
+def global_avgpool_ref(x):
+    """Global average pool [N,H,W,C] → [N,C] (the classifier-head reduce).
+
+    Integer inputs round the mean back onto the input dtype's grid, like
+    ``avgpool2d_ref``."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        s = jnp.sum(x.astype(jnp.int32), axis=(1, 2))
+        mean = jnp.round(s.astype(jnp.float32) / (x.shape[1] * x.shape[2]))
+        info = jnp.iinfo(x.dtype)
+        return jnp.clip(mean, info.min, info.max).astype(x.dtype)
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2)).astype(x.dtype)
 
 
 def requantize_ref(acc, out_scale):

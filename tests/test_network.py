@@ -116,6 +116,103 @@ def test_vgg_small_runs():
     assert rel < 0.15, rel
 
 
+def test_per_channel_scales_end_to_end():
+    """Per-channel (kout-bank) weight scales ride the fused requantize
+    epilogue end-to-end: [K] requant vectors, both backends bit-identical,
+    and accuracy no worse than per-tensor (usually better — that is the
+    point of per-channel calibration)."""
+    plan, params, x = _lenet_setup()
+    want = plan.apply_ref(params, x)
+    qpc = network.quantize_network(plan, params, x, per_channel=True)
+    assert qpc.per_channel
+    # every non-final parametric layer carries a [K] requant vector
+    for sp, rq, shp in zip(plan.layers, qpc.requants, plan.param_shapes()):
+        if sp.kind in ("conv", "dense") and rq is not None:
+            assert rq.shape == (shp["b"][0],), (sp.kind, rq.shape)
+    a = network.make_int8_program(
+        qpc, ConvCoreConfig(backend="pallas", int8=True))(x)
+    b = network.make_int8_program(
+        qpc, ConvCoreConfig(backend="ref", int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    qpt = network.quantize_network(plan, params, x)
+    pt = network.make_int8_program(
+        qpt, ConvCoreConfig(backend="ref", int8=True))(x)
+    rel_pc = float(jnp.linalg.norm(a - want) / jnp.linalg.norm(want))
+    rel_pt = float(jnp.linalg.norm(pt - want) / jnp.linalg.norm(want))
+    assert rel_pc < 0.1, rel_pc
+    assert rel_pc <= rel_pt * 1.25, (rel_pc, rel_pt)   # no regression
+
+
+def _head_plan():
+    """Classifier head without flatten + giant dense: avg-pool then a
+    global average pool straight into the logits layer."""
+    return network.NetworkPlan(
+        name="gap_head", input_shape=(16, 16, 4),
+        layers=(
+            network.conv(8, relu=True, pool=True),
+            network.conv(16, relu=True),
+            network.avgpool(2),
+            network.global_pool(),
+            network.dense(10),
+        ))
+
+
+def test_avg_and_global_pool_shapes_and_oracle():
+    plan = _head_plan()
+    assert plan.activation_shapes() == [
+        (8, 8, 8), (8, 8, 16), (4, 4, 16), (16,), (10,)]
+    # dense consumes the global-pooled channel vector — no flatten layer
+    assert plan.param_shapes()[-1] == {"w": (16, 10), "b": (10,)}
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    got = plan.apply_ref(params, x)
+    h = x
+    h = ref.conv2d_epilogue_ref(h, params[0]["w"], params[0]["b"],
+                                padding="SAME", relu=True, pool=True)
+    h = ref.conv2d_epilogue_ref(h, params[1]["w"], params[1]["b"],
+                                padding="SAME", relu=True)
+    h = ref.avgpool2d_ref(h, 2)
+    h = jnp.mean(h, axis=(1, 2))
+    h = h @ params[-1]["w"] + params[-1]["b"]
+    np.testing.assert_allclose(got, h, rtol=1e-5, atol=1e-5)
+
+
+def test_avg_global_pool_int8_program():
+    plan = _head_plan()
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(4, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    a = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))(x)
+    b = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    want = plan.apply_ref(params, x)
+    rel = float(jnp.linalg.norm(a - want) / jnp.linalg.norm(want))
+    assert rel < 0.15, rel
+    # pooling layers are free in the paper's psum accounting
+    rows = dict(plan.psum_table())
+    assert rows["avgpool2"] == 0 and rows["globalpool3"] == 0
+
+
+def test_vgg_small_64_and_imagenet_plans_compile():
+    """Per-layer TilePlans let larger-input plans compile: every conv
+    layer gets a plan that fits the VMEM budget."""
+    for plan in (network.vgg_small((64, 64, 4)),
+                 network.vgg_imagenet(), network.large_map()):
+        tps = plan.tile_plans()
+        convs = [tp for tp in tps if tp is not None]
+        assert len(convs) == sum(
+            1 for sp in plan.layers if sp.kind == "conv")
+        assert all(tp.fits_vmem for tp in convs), plan.name
+    # the large-map plan's first layer genuinely exceeds the whole-map
+    # budget and compiles onto spatial tiles
+    whole = network.large_map().tile_plans(vmem_budget=None)
+    assert any(not tp.fits_vmem for tp in whole if tp is not None)
+    assert any(tp.tiled for tp in network.large_map().tile_plans()
+               if tp is not None)
+
+
 # ---------------------------------------------------------------------------
 # Scheduler: replicated IP cores
 # ---------------------------------------------------------------------------
