@@ -1,7 +1,11 @@
-"""Whole-network benchmark: LeNet / VGG-small / large-map int8
-NetworkPlans through the Pallas backend (interpret on CPU — functional
-timing reference), with the §5.2 cycle model's whole-network prediction
-alongside the measurement.
+"""Whole-network benchmark: LeNet / VGG-small / ResNet-small / large-map
+int8 NetworkPlans through the Pallas backend (interpret on CPU —
+functional timing reference), with the §5.2 cycle model's whole-network
+prediction alongside the measurement.
+
+The resnet row exercises the residual-graph (DAG) compiler: skip
+connections with shared-grid int8 merge adds and 1×1 projection
+shortcuts, the ResNet/MobileNet workload class.
 
 The large-map network's first layer exceeds the whole-map VMEM budget —
 it only runs because the spatially-tiled conv pipeline streams it through
@@ -13,8 +17,11 @@ is tracked across PRs: per-network images/s, layers/s, measured µs/batch,
 the model-predicted FPGA times (1 IP core and the 20-core full board),
 and per-plan tiling stats.
 
-``--smoke`` (or run(smoke=True)) times LeNet only with minimal iterations
-— the CI fast path.
+``--smoke`` (or run(smoke=True)) times LeNet plus the resnet residual
+graph with minimal iterations — the CI fast path.  The large-map row is
+measured with iters=1/warmup=0 (interpret mode is slow), so treat its
+measured_us as indicative — the modelled FPGA times are the stable
+cross-PR signal.
 """
 
 from __future__ import annotations
@@ -81,13 +88,17 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
 def run(smoke: bool = False):
     rng = np.random.default_rng(3)
     if smoke:
-        # CI fast path: time LeNet only and do NOT touch the tracked
-        # BENCH_network.json — that file records the cross-PR trajectory
-        # of the full run
+        # CI fast path: LeNet + the residual-graph compiler (resnet) with
+        # minimal iterations; do NOT touch the tracked BENCH_network.json
+        # — that file records the cross-PR trajectory of the full run
         _bench_plan(network.lenet(), rng, batch=2, iters=1, warmup=1)
+        _bench_plan(network.resnet_small(), rng, batch=2, iters=1,
+                    warmup=1)
         return
     results = [_bench_plan(network.lenet(), rng),
                _bench_plan(network.vgg_small(), rng),
+               # residual graphs: skip adds + projection shortcuts
+               _bench_plan(network.resnet_small(), rng),
                # the tiled-pipeline workload: exceeds whole-map VMEM
                _bench_plan(network.large_map(), rng, batch=2,
                            iters=1, warmup=0)]

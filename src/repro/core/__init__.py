@@ -20,9 +20,9 @@ from one layer to whole networks.
 
 from repro.core.convcore import (Backend, ConvCore, ConvCoreConfig,
                                  get_backend, paper_workload,
-                                 register_backend)
+                                 register_backend, unregister_backend)
 from repro.core import banking, network, perfmodel, quantize, scheduler
 
 __all__ = ["Backend", "ConvCore", "ConvCoreConfig", "get_backend",
-           "paper_workload", "register_backend", "banking", "network",
-           "perfmodel", "quantize", "scheduler"]
+           "paper_workload", "register_backend", "unregister_backend",
+           "banking", "network", "perfmodel", "quantize", "scheduler"]

@@ -200,7 +200,13 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
     out_bytes = acc_bytes if out_bytes is None else out_bytes
     oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
     if pool:
-        oh, ow = max(2, (oh // 2) * 2), max(2, (ow // 2) * 2)
+        # agree with the kernel: conv2d_ws rejects fused pooling of conv
+        # outputs smaller than the 2×2 window, so the planner must not
+        # invent a 2×2 map (and its phantom tile traffic) for such layers
+        if oh < 2 or ow < 2:
+            raise ValueError(
+                f"2×2 pool needs a ≥2×2 conv output, got {oh}×{ow}")
+        oh, ow = (oh // 2) * 2, (ow // 2) * 2
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
 
     def build(th: int, tw: int, cbn: int, kbn: int) -> TilePlan:

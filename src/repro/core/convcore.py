@@ -71,7 +71,12 @@ class RefBackend:
         if wrap8:
             # epilogue runs on the int32 accumulator, THEN the result wraps
             # to 8 bits — matching the Pallas path (epilogue in the kernel,
-            # wrap in ops.conv2d)
+            # wrap in ops.conv2d); like ops.conv2d, wrap8 + out_scale is a
+            # contract violation, not a silent drop
+            if out_scale is not None:
+                raise ValueError("wrap8 and out_scale are mutually "
+                                 "exclusive: the Fig. 6 wrap path has no "
+                                 "requantize stage")
             assert x.dtype == jnp.int8
             acc = ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
                                           padding=padding, relu=relu,
@@ -124,6 +129,13 @@ def get_backend(name: str) -> Backend:
 
 def register_backend(backend: Backend) -> None:
     BACKENDS[backend.name] = backend
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (no-op if absent).  Tests that register
+    sharded backends must clean up so the global registry doesn't leak
+    across tests — tests/conftest.py snapshots/restores it as well."""
+    BACKENDS.pop(name, None)
 
 
 @dataclass(frozen=True)

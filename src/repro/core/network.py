@@ -3,9 +3,18 @@
 The paper's IP core "can process a convolutional layer at a time" (§4.2);
 running a network on the FPGA means the host sequences layer passes, with
 the output BRAMs of one pass becoming the image BRAMs of the next.  This
-module is that sequencer as a compiler: a ``NetworkPlan`` (a straight-line
-graph of conv / pool / flatten / dense ``LayerSpec``s) is turned into one
-jitted multi-layer program over a ``Backend`` (core/convcore.py).
+module is that sequencer as a compiler: a ``NetworkPlan`` — a **DAG** of
+conv / pool / flatten / dense ``LayerSpec`` nodes plus ``add``/``concat``
+merge nodes — is turned into one jitted multi-layer program over a
+``Backend`` (core/convcore.py).
+
+Graph topology: every node may name its producer(s) (``inputs``; empty
+means "the previous layer", the straight-line default), so ResNet-class
+skip connections and branch-merge topologies express directly.  The
+``layers`` tuple must already be topologically ordered (inputs precede
+consumers) — one left-to-right sweep IS a topological schedule, which is
+also the hardware truth: the single layer-at-a-time core runs parallel
+branches serially, the host just sequences the passes.
 
 Layer-to-layer int8 chaining (the production path): ``quantize_network``
 calibrates per-layer activation scales from a float forward pass, quantizes
@@ -17,6 +26,14 @@ inter-layer feature map in int8: the fused kernel epilogue (ReLU → pool →
 requantize) writes the next layer's int8 input directly, so nothing
 round-trips HBM in int32 — the FPGA post-processing idiom at network scale.
 
+Residual adds stay on that int8 story: a skip add is only exact when both
+branches land on the same int8 grid, so ``quantize_network`` calibrates a
+shared output scale per merge node and emits per-branch requant scales
+(``s_branch / s_out`` — quantize.branch_requant_scale) that align the skip
+path and the conv path onto the shared grid.  The merge itself is then a
+pure saturating int8 add (kernels/ref.add_requant_ref) — the FPGA
+output-BRAM-crossbar idiom, no int32 round-trip.
+
 Spatial tiling: ``make_int8_program`` computes a per-layer
 ``banking.TilePlan`` (``NetworkPlan.tile_plans``), so conv layers whose
 whole-map working set exceeds the VMEM budget stream through halo'd H/W
@@ -26,12 +43,14 @@ and the segmentation-scale ``large_map`` plan all compile unchanged.
 Paper → TPU mapping of the replicated-IP-core mode (full-board 4.48 GOPS):
 core/scheduler.py shards a compiled program across devices (one IP core ↔
 one device) or vmapped virtual cores; core/perfmodel.network_report sums
-the §5.2 cycle model over the plan's layers, including the 20-core
-configuration.
+the §5.2 cycle model over the plan's nodes, including the 20-core
+configuration (branches serialize on the single core, so the DAG's cost
+is still the sum of its nodes).
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
@@ -42,7 +61,8 @@ import numpy as np
 
 from repro.core import banking, perfmodel
 from repro.core.convcore import ConvCoreConfig, get_backend
-from repro.core.quantize import (act_scale_from_calibration, quantize_symmetric,
+from repro.core.quantize import (act_scale_from_calibration,
+                                 branch_requant_scale, quantize_symmetric,
                                  requant_scale)
 from repro.kernels import ref
 
@@ -50,17 +70,26 @@ from repro.kernels import ref
 # Layer graph
 # ---------------------------------------------------------------------------
 
+INPUT = "input"          # reserved node name: the network input
+
 
 @dataclass(frozen=True)
 class LayerSpec:
-    """One layer of a straight-line CNN.
+    """One node of a CNN graph.
 
     kind: "conv" | "pool" | "avgpool" | "globalpool" | "flatten" |
-    "dense".  ``pool=True`` on a conv layer fuses the 2×2/2 max-pool into
-    the kernel epilogue (one HBM round-trip); standalone "pool" /
-    "avgpool" layers are the unfused fallbacks, and "globalpool" is the
-    global average pool ([N,H,W,C] → [N,C]) that lets classifier heads
-    skip the flatten + giant-dense pattern."""
+    "dense" | "add" | "concat".  ``pool=True`` on a conv layer fuses the
+    2×2/2 max-pool into the kernel epilogue (one HBM round-trip);
+    standalone "pool" / "avgpool" layers are the unfused fallbacks, and
+    "globalpool" is the global average pool ([N,H,W,C] → [N,C]) that lets
+    classifier heads skip the flatten + giant-dense pattern.
+
+    ``name`` labels the node so later layers can reference it (default
+    ``f"{kind}{index}"``); ``inputs`` names the producer node(s) — empty
+    means "the previous layer" (the straight-line default) and the
+    reserved name "input" is the network input.  "add" is the residual
+    merge (exactly two branches of identical shape, optional fused ReLU);
+    "concat" stacks ≥2 branches along the channel axis."""
     kind: str
     features: int = 0                      # conv: K; dense: output dim
     kernel: Tuple[int, int] = (3, 3)
@@ -69,93 +98,221 @@ class LayerSpec:
     relu: bool = False
     pool: bool = False                     # conv only: fused 2×2 max-pool
     size: int = 2                          # "pool"/"avgpool": window/stride
+    name: Optional[str] = None             # node label for skip references
+    inputs: Tuple[str, ...] = ()           # () → previous layer
+
+
+def _single(input: Optional[str]) -> Tuple[str, ...]:
+    return () if input is None else (input,)
 
 
 def conv(features: int, kernel: int = 3, stride: int = 1,
          padding: ref.Padding = "SAME", relu: bool = True,
-         pool: bool = False) -> LayerSpec:
+         pool: bool = False, name: Optional[str] = None,
+         input: Optional[str] = None) -> LayerSpec:
     return LayerSpec("conv", features=features, kernel=(kernel, kernel),
-                     stride=stride, padding=padding, relu=relu, pool=pool)
+                     stride=stride, padding=padding, relu=relu, pool=pool,
+                     name=name, inputs=_single(input))
 
 
-def maxpool(size: int = 2) -> LayerSpec:
-    return LayerSpec("pool", size=size)
+def maxpool(size: int = 2, name: Optional[str] = None,
+            input: Optional[str] = None) -> LayerSpec:
+    return LayerSpec("pool", size=size, name=name, inputs=_single(input))
 
 
-def avgpool(size: int = 2) -> LayerSpec:
-    return LayerSpec("avgpool", size=size)
+def avgpool(size: int = 2, name: Optional[str] = None,
+            input: Optional[str] = None) -> LayerSpec:
+    return LayerSpec("avgpool", size=size, name=name, inputs=_single(input))
 
 
-def global_pool() -> LayerSpec:
-    return LayerSpec("globalpool")
+def global_pool(name: Optional[str] = None,
+                input: Optional[str] = None) -> LayerSpec:
+    return LayerSpec("globalpool", name=name, inputs=_single(input))
 
 
-def flatten() -> LayerSpec:
-    return LayerSpec("flatten")
+def flatten(name: Optional[str] = None,
+            input: Optional[str] = None) -> LayerSpec:
+    return LayerSpec("flatten", name=name, inputs=_single(input))
 
 
-def dense(features: int, relu: bool = False) -> LayerSpec:
-    return LayerSpec("dense", features=features, relu=relu)
+def dense(features: int, relu: bool = False, name: Optional[str] = None,
+          input: Optional[str] = None) -> LayerSpec:
+    return LayerSpec("dense", features=features, relu=relu, name=name,
+                     inputs=_single(input))
+
+
+def add(a: str, b: str, relu: bool = False,
+        name: Optional[str] = None) -> LayerSpec:
+    """Residual merge: elementwise add of two same-shape branches (int8
+    path: per-branch requantize onto a shared grid, then a saturating
+    int8 add — ref.add_requant_ref)."""
+    return LayerSpec("add", relu=relu, name=name, inputs=(a, b))
+
+
+def concat(*inputs: str, name: Optional[str] = None) -> LayerSpec:
+    """Branch merge: concatenate ≥2 branches along the channel axis (int8
+    path: each branch requantizes onto the merge node's shared grid)."""
+    return LayerSpec("concat", name=name, inputs=tuple(inputs))
 
 
 @dataclass(frozen=True)
 class NetworkPlan:
-    """A straight-line CNN over [H, W, C] inputs."""
+    """A CNN graph over [H, W, C] inputs.
+
+    ``layers`` is a topologically-ordered node tuple: every node's inputs
+    must be earlier nodes (or the network input).  Straight-line plans
+    (no ``inputs`` anywhere) behave exactly as before."""
     name: str
     input_shape: Tuple[int, int, int]          # (H, W, C)
     layers: Tuple[LayerSpec, ...]
 
-    def activation_shapes(self) -> List[Tuple[int, ...]]:
-        """Per-layer output shapes (without the batch dim)."""
-        h, w, c = self.input_shape
-        flat: Optional[int] = None
+    # -- graph resolution ---------------------------------------------------
+
+    @functools.cached_property
+    def _graph(self) -> Tuple[Tuple[str, ...], Tuple[Tuple[int, ...], ...]]:
+        """(node names, resolved input indices), computed and VALIDATED
+        once per (frozen) plan instance — every shape/cost/execution walk
+        shares this resolution instead of re-deriving it."""
+        explicit = {sp.name for sp in self.layers if sp.name}
+        names: List[str] = []
+        for i, sp in enumerate(self.layers):
+            if sp.name:
+                if sp.name == INPUT or sp.name in names:
+                    raise ValueError(
+                        f"duplicate or reserved node name {sp.name!r}")
+                names.append(sp.name)
+                continue
+            nm = f"{sp.kind}{i}"
+            while nm == INPUT or nm in explicit:
+                nm += "_"
+            names.append(nm)
+        index = {nm: i for i, nm in enumerate(names)}
         out: List[Tuple[int, ...]] = []
-        for sp in self.layers:
+        for i, sp in enumerate(self.layers):
+            if sp.inputs:
+                idxs = []
+                for nm in sp.inputs:
+                    if nm == INPUT:
+                        idxs.append(-1)
+                        continue
+                    j = index.get(nm)
+                    if j is None:
+                        raise ValueError(
+                            f"node {names[i]!r}: unknown input {nm!r}")
+                    if j >= i:
+                        raise ValueError(
+                            f"node {names[i]!r}: input {nm!r} does not "
+                            "precede it — layers must be topologically "
+                            "ordered")
+                    idxs.append(j)
+                resolved = tuple(idxs)
+            else:
+                resolved = (i - 1,)
+            if sp.kind == "add" and len(resolved) != 2:
+                raise ValueError(f"node {names[i]!r}: add takes exactly two "
+                                 f"inputs, got {len(resolved)}")
+            if sp.kind == "concat" and len(resolved) < 2:
+                raise ValueError(f"node {names[i]!r}: concat needs ≥2 inputs")
+            if sp.kind not in ("add", "concat") and len(resolved) != 1:
+                raise ValueError(f"node {names[i]!r}: {sp.kind} takes one "
+                                 f"input, got {len(resolved)}")
+            out.append(resolved)
+        return tuple(names), tuple(out)
+
+    def node_names(self) -> List[str]:
+        """Per-node names (``sp.name`` or ``f"{kind}{i}"``); unique, never
+        the reserved input name.  Explicit names own the namespace: an
+        auto-generated default that would collide with one (e.g. a user
+        node named "conv1" before an unnamed conv at index 1) steps aside
+        instead of rejecting the plan."""
+        return list(self._graph[0])
+
+    def resolved_inputs(self) -> List[Tuple[int, ...]]:
+        """Per-node input indices (−1 = the network input).  Validates the
+        graph: referenced nodes must exist and *precede* their consumer
+        (the layer tuple is a topological order) and merge arities hold."""
+        return list(self._graph[1])
+
+    # -- static shape / cost walks -----------------------------------------
+
+    def activation_shapes(self) -> List[Tuple[int, ...]]:
+        """Per-node output shapes (without the batch dim)."""
+        names = self.node_names()
+        ins = self.resolved_inputs()
+        shapes: List[Tuple[int, ...]] = []
+
+        def src(j: int) -> Tuple[int, ...]:
+            return self.input_shape if j < 0 else shapes[j]
+
+        for i, sp in enumerate(self.layers):
+            s0 = src(ins[i][0])
             if sp.kind == "conv":
-                assert flat is None, "conv after flatten"
+                if len(s0) != 3:
+                    raise ValueError(f"node {names[i]!r}: conv after flatten")
                 kh, kw = sp.kernel
-                h, w = ref.conv_out_shape(h, w, kh, kw, sp.stride,
+                h, w = ref.conv_out_shape(s0[0], s0[1], kh, kw, sp.stride,
                                           sp.padding)
                 if sp.pool:
+                    if h < 2 or w < 2:
+                        # same error as plan_tiles / conv2d_ws — the shape
+                        # walk must not report a map the kernel rejects
+                        raise ValueError(
+                            f"node {names[i]!r}: 2×2 pool needs a ≥2×2 "
+                            f"conv output, got {h}×{w}")
                     h, w = h // 2, w // 2
-                c = sp.features
-                out.append((h, w, c))
-            elif sp.kind in ("pool", "avgpool"):
-                h, w = (h - sp.size) // sp.size + 1, \
-                       (w - sp.size) // sp.size + 1
-                out.append((h, w, c))
-            elif sp.kind == "globalpool":
-                flat = c
-                out.append((flat,))
-            elif sp.kind == "flatten":
-                flat = h * w * c
-                out.append((flat,))
+                shapes.append((h, w, sp.features))
+            elif sp.kind in ("pool", "avgpool", "globalpool", "flatten"):
+                if len(s0) != 3:
+                    raise ValueError(f"node {names[i]!r}: {sp.kind} needs "
+                                     f"an [H,W,C] input, got shape {s0}")
+                h, w, c = s0
+                if sp.kind == "globalpool":
+                    shapes.append((c,))
+                elif sp.kind == "flatten":
+                    shapes.append((h * w * c,))
+                else:
+                    shapes.append(((h - sp.size) // sp.size + 1,
+                                   (w - sp.size) // sp.size + 1, c))
             elif sp.kind == "dense":
-                assert flat is not None, "dense before flatten/globalpool"
-                flat = sp.features
-                out.append((flat,))
+                if len(s0) != 1:
+                    raise ValueError(f"node {names[i]!r}: dense before "
+                                     "flatten/globalpool")
+                shapes.append((sp.features,))
+            elif sp.kind == "add":
+                branches = [src(j) for j in ins[i]]
+                if len(set(branches)) != 1:
+                    raise ValueError(f"node {names[i]!r}: add branches "
+                                     f"disagree on shape: {branches}")
+                shapes.append(branches[0])
+            elif sp.kind == "concat":
+                branches = [src(j) for j in ins[i]]
+                if any(len(b) != 3 for b in branches) or \
+                        len({b[:2] for b in branches}) != 1:
+                    raise ValueError(f"node {names[i]!r}: concat branches "
+                                     f"must share H×W: {branches}")
+                shapes.append((*branches[0][:2],
+                               sum(b[2] for b in branches)))
             else:
                 raise ValueError(f"unknown layer kind {sp.kind!r}")
-        return out
+        return shapes
 
     def param_shapes(self) -> List[Optional[dict]]:
-        """Per-layer {"w": ..., "b": ...} shapes (None for pool/flatten)."""
-        h, w, c = self.input_shape
+        """Per-node {"w": ..., "b": ...} shapes (None for parameter-free
+        nodes)."""
+        ins = self.resolved_inputs()
+        acts = self.activation_shapes()
         shapes: List[Optional[dict]] = []
-        in_c: int = c
-        in_flat: Optional[int] = None
-        for sp, out in zip(self.layers, self.activation_shapes()):
+        for i, sp in enumerate(self.layers):
+            s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
             if sp.kind == "conv":
                 kh, kw = sp.kernel
-                shapes.append({"w": (kh, kw, in_c, sp.features),
+                shapes.append({"w": (kh, kw, s0[2], sp.features),
                                "b": (sp.features,)})
-                in_c = sp.features
             elif sp.kind == "dense":
-                shapes.append({"w": (in_flat, sp.features),
+                shapes.append({"w": (s0[0], sp.features),
                                "b": (sp.features,)})
             else:
                 shapes.append(None)
-            in_flat = out[0] if len(out) == 1 else None
         return shapes
 
     def init_params(self, rng: np.random.Generator) -> List[Optional[dict]]:
@@ -175,42 +332,34 @@ class NetworkPlan:
         return params
 
     def psum_table(self) -> List[Tuple[str, int]]:
-        """Per-layer psum counts in the paper's accounting (conv: output
+        """Per-node psum counts in the paper's accounting (conv: output
         pixels × kernels × input channels; dense: a 1×1-conv GEMM, in×out;
-        pool/flatten: free — the fused epilogue absorbs post-processing)."""
-        h, w, c = self.input_shape
-        flat: Optional[int] = None
+        pool/flatten/merge: free — the fused epilogue absorbs
+        post-processing and the output-BRAM crossbar absorbs residual
+        adds/concats).  Parallel branches of a DAG cost their SUM: the
+        single layer-at-a-time core serializes them (§4.2)."""
+        names = self.node_names()
+        ins = self.resolved_inputs()
+        acts = self.activation_shapes()
         rows: List[Tuple[str, int]] = []
         for i, sp in enumerate(self.layers):
+            s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
             if sp.kind == "conv":
                 kh, kw = sp.kernel
-                rows.append((f"conv{i}", perfmodel.psum_count(
-                    h, w, c, sp.features, kh, kw, sp.stride, sp.padding)))
-                h, w = ref.conv_out_shape(h, w, kh, kw, sp.stride,
-                                          sp.padding)
-                if sp.pool:
-                    h, w = h // 2, w // 2
-                c = sp.features
-            elif sp.kind in ("pool", "avgpool"):
-                h, w = (h - sp.size) // sp.size + 1, \
-                       (w - sp.size) // sp.size + 1
-                rows.append((f"{sp.kind}{i}", 0))
-            elif sp.kind == "globalpool":
-                flat = c
-                rows.append((f"globalpool{i}", 0))
-            elif sp.kind == "flatten":
-                flat = h * w * c
-                rows.append((f"flatten{i}", 0))
+                rows.append((names[i], perfmodel.psum_count(
+                    s0[0], s0[1], s0[2], sp.features, kh, kw, sp.stride,
+                    sp.padding)))
             elif sp.kind == "dense":
-                rows.append((f"dense{i}", flat * sp.features))
-                flat = sp.features
+                rows.append((names[i], s0[0] * sp.features))
+            else:
+                rows.append((names[i], 0))
         return rows
 
     def tile_plans(self, cin_banks: int = 4, kout_banks: int = 4,
                    in_bytes: int = 1,
                    vmem_budget: Optional[int] = banking.VMEM_BYTES
                    ) -> List[Optional[banking.TilePlan]]:
-        """Per-layer spatial-tile × channel-bank plans (None for layers
+        """Per-node spatial-tile × channel-bank plans (None for nodes
         without a conv).  int8-datapath sizes by default; the final
         parametric layer (no fused requantize) keeps a 4-byte epilogue
         output, every other conv writes int8.  ``vmem_budget=None``
@@ -218,24 +367,22 @@ class NetworkPlan:
         param_kinds = ("conv", "dense")
         last_param = max((i for i, sp in enumerate(self.layers)
                           if sp.kind in param_kinds), default=-1)
-        h, w, c = self.input_shape
+        ins = self.resolved_inputs()
+        acts = self.activation_shapes()
         plans: List[Optional[banking.TilePlan]] = []
-        for i, (sp, out) in enumerate(zip(self.layers,
-                                          self.activation_shapes())):
-            if sp.kind == "conv":
-                kh, kw = sp.kernel
-                plans.append(banking.plan_tiles(
-                    h, w, c, sp.features, kh, kw, stride=sp.stride,
-                    padding=sp.padding, pool=sp.pool, in_bytes=in_bytes,
-                    out_bytes=4 if i == last_param else in_bytes,
-                    cin_banks=banking.divisor_banks(c, cin_banks),
-                    kout_banks=banking.divisor_banks(sp.features,
-                                                     kout_banks),
-                    vmem_budget=vmem_budget))
-            else:
+        for i, sp in enumerate(self.layers):
+            if sp.kind != "conv":
                 plans.append(None)
-            if len(out) == 3:
-                h, w, c = out
+                continue
+            h, w, c = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
+            kh, kw = sp.kernel
+            plans.append(banking.plan_tiles(
+                h, w, c, sp.features, kh, kw, stride=sp.stride,
+                padding=sp.padding, pool=sp.pool, in_bytes=in_bytes,
+                out_bytes=4 if i == last_param else in_bytes,
+                cin_banks=banking.divisor_banks(c, cin_banks),
+                kout_banks=banking.divisor_banks(sp.features, kout_banks),
+                vmem_budget=vmem_budget))
         return plans
 
     def perf_report(self, cfg: perfmodel.IPCoreConfig =
@@ -245,35 +392,64 @@ class NetworkPlan:
         20-core full-board configuration (perfmodel.network_report).
         With ``tile_plans`` (e.g. from :meth:`tile_plans`) the model also
         prices tile revisits and halo re-reads against the DMA interface,
-        keeping large-map GOPS honest."""
+        keeping large-map GOPS honest.  DAG branches serialize on the
+        single core, so the sum over nodes is the schedule length."""
         return perfmodel.network_report(self.psum_table(), cfg,
                                         tile_plans=tile_plans)
 
+    # -- execution ----------------------------------------------------------
+
     def forward_activations(self, params: Sequence[Optional[dict]],
                             x: jax.Array):
-        """Yield (index, spec, layer_params, activation-after-layer)
-        through the float oracle — the single definition of layer
-        semantics, shared by ``apply_ref`` and ``quantize_network``."""
+        """Yield (index, spec, layer_params, activation-after-node) through
+        the float oracle in graph (tuple) order — the single definition of
+        node semantics, shared by ``apply_ref`` and ``quantize_network``.
+        Skip/branch inputs are looked up from the per-node activation
+        list, so DAG plans walk exactly like straight-line ones.  This
+        loop runs EAGERLY (apply_ref / calibration), so each activation is
+        released after its last consumer — peak memory stays
+        O(live activations), not O(all activations)."""
+        ins = self.resolved_inputs()
+        last_use = {}
+        for i, idxs in enumerate(ins):
+            for j in idxs:
+                if j >= 0:
+                    last_use[j] = i
+        # tests/test_network.py asserts the liveness property through this
+        # local's name (acts)
+        acts: List[Optional[jax.Array]] = []
         for i, (sp, p) in enumerate(zip(self.layers, params)):
+            src = [x if j < 0 else acts[j] for j in ins[i]]
+            h = src[0]
             if sp.kind == "conv":
-                x = ref.conv2d_epilogue_ref(
-                    x, p["w"], p["b"], stride=sp.stride, padding=sp.padding,
+                h = ref.conv2d_epilogue_ref(
+                    h, p["w"], p["b"], stride=sp.stride, padding=sp.padding,
                     relu=sp.relu, pool=sp.pool)
             elif sp.kind == "pool":
-                x = ref.maxpool2d_ref(x, sp.size)
+                h = ref.maxpool2d_ref(h, sp.size)
             elif sp.kind == "avgpool":
-                x = ref.avgpool2d_ref(x, sp.size)
+                h = ref.avgpool2d_ref(h, sp.size)
             elif sp.kind == "globalpool":
-                x = ref.global_avgpool_ref(x)
+                h = ref.global_avgpool_ref(h)
             elif sp.kind == "flatten":
-                x = x.reshape(x.shape[0], -1)
+                h = h.reshape(h.shape[0], -1)
             elif sp.kind == "dense":
-                x = ref.matmul_ref(x, p["w"], p["b"])
+                h = ref.matmul_ref(h, p["w"], p["b"])
                 if sp.relu:
-                    x = jnp.maximum(x, 0)
+                    h = jnp.maximum(h, 0)
+            elif sp.kind == "add":
+                h = src[0] + src[1]
+                if sp.relu:
+                    h = jnp.maximum(h, 0)
+            elif sp.kind == "concat":
+                h = jnp.concatenate(src, axis=-1)
             else:
                 raise ValueError(f"unknown layer kind {sp.kind!r}")
-            yield i, sp, p, x
+            acts.append(h)
+            for j in ins[i]:
+                if j >= 0 and last_use[j] == i:
+                    acts[j] = None               # last consumer passed
+            yield i, sp, p, h
 
     def apply_ref(self, params: Sequence[Optional[dict]], x: jax.Array
                   ) -> jax.Array:
@@ -310,7 +486,12 @@ class QuantizedNetwork:
     weight scales the bias, requant, and dequant entries are [K] vectors —
     the kernel epilogue broadcasts them over the last axis.  The final
     parametric layer keeps ``requant=None`` and the program dequantizes
-    its accumulator with ``out_dequant`` (logits want full precision)."""
+    its accumulator with ``out_dequant`` (logits want full precision).
+
+    Per merge node i (``add``/``concat``), ``merge_scales[i]`` holds the
+    per-branch requant scales (``s_branch / s_out``) aligning each int8
+    branch onto the node's shared output grid — the int32-free residual
+    add contract (ref.add_requant_ref)."""
     plan: NetworkPlan
     weights: Tuple[Optional[jax.Array], ...]       # int8
     biases: Tuple[Optional[jax.Array], ...]        # int32
@@ -318,6 +499,7 @@ class QuantizedNetwork:
     in_scale: jax.Array                            # input activation scale
     out_dequant: jax.Array                         # final accumulator scale
     per_channel: bool = False                      # kout-bank weight scales
+    merge_scales: Tuple[Optional[Tuple[jax.Array, ...]], ...] = ()
 
 
 def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
@@ -331,43 +513,78 @@ def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
     (KH, KW, C), dense weights over the contraction dim, yielding [K]
     scale vectors that ride the fused requantize epilogue end-to-end —
     the per-channel refinement the paper's per-kernel-set BRAM layout
-    makes natural."""
+    makes natural.
+
+    Merge nodes calibrate a SHARED output scale from the float merge
+    activation and carry per-branch requant scales (s_branch / s_out):
+    each int8 branch re-expresses on the shared grid, so the residual add
+    is a pure saturating int8 op — both branches land on the same grid,
+    which is the only way the skip add is exact (ref.add_requant_ref is
+    the correctness contract)."""
     last_param = max(i for i, sp in enumerate(plan.layers)
                      if sp.kind in ("conv", "dense"))
-    s_act = act_scale_from_calibration(calib_x)
-    in_scale = s_act
+    ins = plan.resolved_inputs()
+    in_scale = act_scale_from_calibration(calib_x)
+    node_scale: List[Optional[jax.Array]] = []  # per-node int8 output scale
+
+    def scale_of(j: int) -> jax.Array:
+        s = in_scale if j < 0 else node_scale[j]
+        if s is None:
+            raise ValueError("graph consumes the dequantized float output "
+                             "of the final parametric layer")
+        return s
+
     weights: List[Optional[jax.Array]] = []
     biases: List[Optional[jax.Array]] = []
     requants: List[Optional[jax.Array]] = []
+    merges: List[Optional[Tuple[jax.Array, ...]]] = []
     out_dequant = jnp.float32(1.0)
     for i, sp, p, x in plan.forward_activations(params, calib_x):
-        if sp.kind not in ("conv", "dense"):
+        w_ = b_ = rq = ms = None
+        if sp.kind in ("conv", "dense"):
+            s_act = scale_of(ins[i][0])
+            if per_channel:
+                # reduce over everything but the output-channel axis → [K]
+                wq = quantize_symmetric(p["w"],
+                                        axis=tuple(range(p["w"].ndim - 1)))
+                w_scale = wq.scale.reshape(-1)
+            else:
+                wq = quantize_symmetric(p["w"])
+                w_scale = wq.scale
+            acc_scale = s_act * w_scale               # int32 psum units
+            w_ = wq.values
+            b_ = jnp.round(p["b"] / acc_scale).astype(jnp.int32)
+            if i == last_param:
+                out_dequant = acc_scale
+                node_scale.append(None)
+            else:
+                s_next = act_scale_from_calibration(x)
+                rq = requant_scale(s_act, w_scale, s_next)
+                node_scale.append(s_next)
+        elif sp.kind in ("add", "concat"):
+            # shared merge grid: calibrate from the float merge activation,
+            # align every branch onto it with a per-branch requant scale
+            s_out = act_scale_from_calibration(x)
+            ms = tuple(branch_requant_scale(scale_of(j), s_out)
+                       for j in ins[i])
+            node_scale.append(s_out)
+        else:
             # pooling/flatten are monotone/shape-only: the int8 scale
             # carries (avg-pool stays on the same grid — the mean of
-            # same-scale values rounds back onto it)
-            weights.append(None); biases.append(None); requants.append(None)
-            continue
-        if per_channel:
-            # reduce over everything but the output-channel axis → [K]
-            wq = quantize_symmetric(p["w"],
-                                    axis=tuple(range(p["w"].ndim - 1)))
-            w_scale = wq.scale.reshape(-1)
-        else:
-            wq = quantize_symmetric(p["w"])
-            w_scale = wq.scale
-        acc_scale = s_act * w_scale                   # int32 psum units
-        weights.append(wq.values)
-        biases.append(jnp.round(p["b"] / acc_scale).astype(jnp.int32))
-        if i == last_param:
-            requants.append(None)
-            out_dequant = acc_scale
-        else:
-            s_next = act_scale_from_calibration(x)
-            requants.append(requant_scale(s_act, w_scale, s_next))
-            s_act = s_next
+            # same-scale values rounds back onto it).  A None scale (the
+            # dequantized float tail after the final parametric layer)
+            # propagates: these ops run fine on the float output, only
+            # parametric/merge consumers need an int8 grid.
+            node_scale.append(in_scale if ins[i][0] < 0
+                              else node_scale[ins[i][0]])
+        weights.append(w_)
+        biases.append(b_)
+        requants.append(rq)
+        merges.append(ms)
     return QuantizedNetwork(plan, tuple(weights), tuple(biases),
                             tuple(requants), in_scale, out_dequant,
-                            per_channel=per_channel)
+                            per_channel=per_channel,
+                            merge_scales=tuple(merges))
 
 
 def make_int8_program(qnet: QuantizedNetwork,
@@ -384,19 +601,41 @@ def make_int8_program(qnet: QuantizedNetwork,
     (the GEMM epilogue is a cheap elementwise op XLA fuses into the
     kernel's consumer).
 
+    Nodes compile in the tuple's topological order; skip/branch operands
+    are looked up from the per-node output list, and merge nodes execute
+    the int8 residual-add / concat contract (per-branch requantize onto
+    the shared grid — ref.add_requant_ref).  Because merges consume full
+    feature maps AFTER each sharded conv has concatenated its shards,
+    kout/spatial-sharded backends see consistent operands by
+    construction.
+
     ``tile_plans`` overrides the per-layer plans (one entry per layer,
     None for non-conv) — pass ``program_tile_plans(qnet.plan,
     core_config)`` to share the exact plans with reporting code."""
     backend = get_backend(core_config.backend)
     plan = qnet.plan
+    ins = plan.resolved_inputs()
+    merges = qnet.merge_scales or (None,) * len(plan.layers)
     if tile_plans is None:
         tile_plans = program_tile_plans(plan, core_config)
+    # a short override list would make the compile zip stop early and
+    # silently return an intermediate activation as the "logits"
+    if len(tile_plans) != len(plan.layers):
+        raise ValueError(f"tile_plans needs one entry per node "
+                         f"({len(plan.layers)}), got {len(tile_plans)}")
+    if len(merges) != len(plan.layers):
+        raise ValueError(f"merge_scales needs one entry per node "
+                         f"({len(plan.layers)}), got {len(merges)}")
 
     def program(x: jax.Array) -> jax.Array:
-        h = jnp.clip(jnp.round(x.astype(jnp.float32) / qnet.in_scale),
-                     -128, 127).astype(jnp.int8)
-        for sp, w, b, rq, tp in zip(plan.layers, qnet.weights, qnet.biases,
-                                    qnet.requants, tile_plans):
+        qin = jnp.clip(jnp.round(x.astype(jnp.float32) / qnet.in_scale),
+                       -128, 127).astype(jnp.int8)
+        acts: List[jax.Array] = []
+        for i, (sp, w, b, rq, ms, tp) in enumerate(zip(
+                plan.layers, qnet.weights, qnet.biases, qnet.requants,
+                merges, tile_plans)):
+            src = [qin if j < 0 else acts[j] for j in ins[i]]
+            h = src[0]
             if sp.kind == "conv":
                 h = backend.conv(h, w, b, stride=sp.stride,
                                  padding=sp.padding, relu=sp.relu,
@@ -421,7 +660,17 @@ def make_int8_program(qnet: QuantizedNetwork,
                     h = acc.astype(jnp.float32) * qnet.out_dequant
                 else:
                     h = ref.requantize_ref(acc, rq)
-        return h
+            elif sp.kind == "add":
+                # int32-free residual add: both branches requantize onto
+                # the merge node's shared int8 grid, then saturating add
+                h = ref.add_requant_ref(src[0], src[1], ms[0], ms[1],
+                                        relu=sp.relu)
+            elif sp.kind == "concat":
+                h = jnp.concatenate(
+                    [ref.requantize_ref(s, m) for s, m in zip(src, ms)],
+                    axis=-1)
+            acts.append(h)
+        return acts[-1]
 
     return jax.jit(program)
 
@@ -500,3 +749,66 @@ def large_map(input_shape: Tuple[int, int, int] = (512, 512, 16),
             global_pool(),
             dense(classes),
         ))
+
+
+def _basic_block(i: int, src: str, k: int, stride: int,
+                 project: Optional[bool] = None) -> List[LayerSpec]:
+    """A ResNet basic block: conv-conv plus a skip — identity by default
+    for stride 1, a 1×1 stride-s projection otherwise (the He et al.
+    option-B shortcut).  A stride-1 block that CHANGES width must pass
+    ``project=True`` (the identity skip can't change channel count; the
+    shape walk rejects the mismatch otherwise)."""
+    if project is None:
+        project = stride != 1
+    blk = [
+        conv(k, stride=stride, relu=True, name=f"b{i}c1", input=src),
+        conv(k, relu=False, name=f"b{i}c2"),
+    ]
+    skip = src
+    if project:
+        blk.append(conv(k, kernel=1, stride=stride, relu=False,
+                        name=f"b{i}p", input=src))
+        skip = f"b{i}p"
+    blk.append(add(skip, f"b{i}c2", relu=True, name=f"b{i}"))
+    return blk
+
+
+def resnet_small(input_shape: Tuple[int, int, int] = (32, 32, 4),
+                 classes: int = 10) -> NetworkPlan:
+    """ResNet-style residual classifier: a stem conv, three basic blocks
+    (identity skip, then two stride-2 projection-shortcut blocks), global
+    average pool, dense head — the skip-connection workload class
+    (ResNet/MobileNet families) the straight-line executor could not
+    express.  All merges run the int8 shared-grid residual add."""
+    layers: List[LayerSpec] = [conv(16, relu=True, name="stem")]
+    layers += _basic_block(1, "stem", 16, 1)
+    layers += _basic_block(2, "b1", 32, 2)                      # 16×16
+    layers += _basic_block(3, "b2", 64, 2)                      # 8×8
+    layers += [global_pool(), dense(classes)]
+    return NetworkPlan(name="resnet_small", input_shape=input_shape,
+                       layers=tuple(layers))
+
+
+def resnet_bottleneck(input_shape: Tuple[int, int, int] = (32, 32, 8),
+                      classes: int = 10) -> NetworkPlan:
+    """Bottleneck-residual variant (the ResNet-50 block family): 1×1
+    reduce → 3×3 → 1×1 expand with projection shortcuts, exercising 1×1
+    convs and width changes through the merge-node int8 story."""
+    def bottleneck(i: int, src: str, mid: int, out: int,
+                   stride: int) -> List[LayerSpec]:
+        return [
+            conv(mid, kernel=1, stride=stride, relu=True, name=f"b{i}r",
+                 input=src),
+            conv(mid, relu=True, name=f"b{i}c"),
+            conv(out, kernel=1, relu=False, name=f"b{i}e"),
+            conv(out, kernel=1, stride=stride, relu=False, name=f"b{i}p",
+                 input=src),
+            add(f"b{i}p", f"b{i}e", relu=True, name=f"b{i}"),
+        ]
+
+    layers: List[LayerSpec] = [conv(16, relu=True, name="stem")]
+    layers += bottleneck(1, "stem", 8, 32, 1)
+    layers += bottleneck(2, "b1", 16, 64, 2)                    # 16×16
+    layers += [global_pool(), dense(classes)]
+    return NetworkPlan(name="resnet_bottleneck", input_shape=input_shape,
+                       layers=tuple(layers))

@@ -48,6 +48,16 @@ def requant_scale(in_scale, w_scale, out_scale) -> jax.Array:
     return jnp.asarray(in_scale * w_scale / out_scale, jnp.float32)
 
 
+def branch_requant_scale(s_branch, s_out) -> jax.Array:
+    """Merge-node branch scale: int8 values living on grid ``s_branch``
+    re-express on the merge node's shared output grid ``s_out`` via
+    ``round(q · s_branch/s_out)`` — the per-branch requantize that makes a
+    residual add a pure saturating int8 op (kernels/ref.add_requant_ref),
+    the FPGA output-BRAM-crossbar alignment between a conv path and its
+    skip path."""
+    return jnp.asarray(s_branch / s_out, jnp.float32)
+
+
 def act_scale_from_calibration(x_f32: jax.Array) -> jax.Array:
     """Activation scale from a calibration batch: max|x|/127 (symmetric)."""
     amax = jnp.max(jnp.abs(x_f32.astype(jnp.float32)))

@@ -174,19 +174,27 @@ class MultiCoreScheduler:
         pass through — the cores divide kernels or row bands inside the
         program (compile it against ``shard_backend``), not the batch.
 
+        Ragged batches (n not a multiple of the core count) zero-pad up to
+        the next multiple and slice the padding back off — some cores
+        process a blank image on the last step instead of the host
+        crashing (the fabric doesn't care what's in an idle core's BRAMs).
+
         With enough local devices, one device per IP core (NamedSharding +
         GSPMD); otherwise vmapped virtual cores on one device."""
         cores = self.config.n_cores
         n = x.shape[0]
         if cores == 1 or self.config.mode in ("kout", "spatial"):
             return program(x)
-        assert n % cores == 0, (n, cores)
+        pad = -n % cores
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
         if jax.device_count() >= cores:
             from jax.sharding import NamedSharding, PartitionSpec as P
             mesh = jax.make_mesh((cores,), ("cores",),
                                  devices=jax.devices()[:cores])
             x = jax.device_put(x, NamedSharding(mesh, P("cores")))
-            return program(x)
-        xs = x.reshape(cores, n // cores, *x.shape[1:])
+            return program(x)[:n]
+        xs = x.reshape(cores, (n + pad) // cores, *x.shape[1:])
         ys = jax.vmap(program)(xs)
-        return ys.reshape(n, *ys.shape[2:])
+        return ys.reshape(n + pad, *ys.shape[2:])[:n]

@@ -162,7 +162,10 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
                                             h, w_dim)
     oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
     if pool:
-        assert oh >= 2 and ow >= 2, "2×2 pool needs a ≥2×2 conv output"
+        if oh < 2 or ow < 2:
+            # same error as banking.plan_tiles — planner and kernel agree
+            raise ValueError(
+                f"2×2 pool needs a ≥2×2 conv output, got {oh}×{ow}")
         oh, ow = (oh // 2) * 2, (ow // 2) * 2     # floor semantics
     th = oh if h_tile in (0, None) else min(h_tile, oh)
     tw = ow if w_tile in (0, None) else min(w_tile, ow)

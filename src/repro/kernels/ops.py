@@ -46,9 +46,19 @@ def _matmul_fwd(x, w, bias):
 
 def _matmul_bwd(res, g):
     x, w, has_bias = res
-    gf = g.astype(x.dtype)
-    dx = _mm_mod.matmul_ws(gf, w.T, interpret=_interpret()).astype(x.dtype)
-    dw = _mm_mod.matmul_ws(x.T, gf, interpret=_interpret()).astype(w.dtype)
+    if not (jnp.issubdtype(x.dtype, jnp.floating)
+            and jnp.issubdtype(w.dtype, jnp.floating)):
+        raise TypeError(
+            "matmul_ws VJP requires float operands: an int8 forward has no "
+            "meaningful int8 gradient (casting the cotangent to int8 would "
+            "silently truncate it) — differentiate the float path instead")
+    # promote the cotangent to the accumulator dtype; the backward GEMMs run
+    # in f32 and only the results cast back to the operand dtypes
+    gf = g.astype(jnp.float32)
+    dx = _mm_mod.matmul_ws(gf, w.T.astype(jnp.float32),
+                           interpret=_interpret()).astype(x.dtype)
+    dw = _mm_mod.matmul_ws(x.T.astype(jnp.float32), gf,
+                           interpret=_interpret()).astype(w.dtype)
     db = jnp.sum(g, axis=0) if has_bias else None
     return dx, dw, db
 
@@ -69,12 +79,19 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     padding, fused ReLU → 2×2 max-pool → requantize epilogue, halo-aware
     spatial tiling via h_tile/w_tile — 0 = whole map).
 
-    float in → f32 out; int8 in → int32 out, then
-      * wrap8=True: wrap to int8 (bit-matches the paper's Fig. 6 waveform),
-      * out_scale: requantize in-kernel (acc × scale → int8), the
-        production path — chained int8 layers never leave int8 in HBM.
+    float in → f32 out; int8 in → int32 out.  ``out_scale`` requantizes
+    in-kernel (acc × scale → int8) on EITHER accumulator path — int32 for
+    int8 inputs (the production chained-layer path) and f32 for float
+    inputs (matching RefBackend's epilogue contract) — so the output dtype
+    is int8 whenever a scale is given.  ``wrap8=True`` (int8 inputs only)
+    instead wraps the accumulator to int8, bit-matching the paper's Fig. 6
+    waveform — the wrap path has no requantize stage, so combining it with
+    ``out_scale`` is an error rather than a silent drop.
     """
-    fused_scale = out_scale if (x.dtype == jnp.int8 and not wrap8) else None
+    if wrap8 and out_scale is not None:
+        raise ValueError("wrap8 and out_scale are mutually exclusive: the "
+                         "Fig. 6 wrap path has no requantize stage")
+    fused_scale = out_scale
     out = _conv_mod.conv2d_ws(x, w, bias, fused_scale, stride=stride,
                               padding=padding, cin_banks=cin_banks,
                               kout_banks=kout_banks, h_tile=h_tile,

@@ -142,6 +142,26 @@ def requantize_ref(acc, out_scale):
     return jnp.clip(scaled, -128, 127).astype(jnp.int8)
 
 
+def add_requant_ref(a, b, scale_a, scale_b, *, relu: bool = False):
+    """Residual (skip-connection) merge on a shared int8 grid — the oracle
+    for the network executor's ``add`` node.
+
+    Each int8 operand re-expresses on the merge node's output grid through
+    its branch requant scale (``s_branch / s_out``, round-to-nearest), the
+    aligned values add, optional ReLU, saturate to int8.  When both
+    branches already sit on the shared grid (branch scales == 1) the merge
+    is exact int8 arithmetic — the FPGA output-BRAM-crossbar idiom: the
+    skip path adds into the conv path's output BRAMs without ever leaving
+    8 bits, no int32 accumulator round-trip."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8, (a.dtype, b.dtype)
+    ya = jnp.round(a.astype(jnp.float32) * jnp.asarray(scale_a, jnp.float32))
+    yb = jnp.round(b.astype(jnp.float32) * jnp.asarray(scale_b, jnp.float32))
+    y = ya + yb
+    if relu:
+        y = jnp.maximum(y, 0)
+    return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+
 def conv2d_epilogue_ref(x, w, bias=None, *, stride: int = 1,
                         padding: Padding = "VALID", relu: bool = False,
                         pool: bool = False, out_scale=None):

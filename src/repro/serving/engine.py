@@ -132,8 +132,10 @@ class ConvNetEngine:
 
     One fixed [batch, H, W, C] jitted program (zero-padded partial
     batches), optionally batch-sharded over ``n_cores`` replicated IP
-    cores (core/scheduler.py).  ``submit`` is synchronous microbatching —
-    the conv analogue of the LM engine's lockstep step."""
+    cores (core/scheduler.py — the scheduler pads ragged batches itself,
+    so ``batch`` need not divide by the core count).  ``submit`` is
+    synchronous microbatching — the conv analogue of the LM engine's
+    lockstep step."""
 
     def __init__(self, qnet, *, batch: int = 8, n_cores: int = 1,
                  backend: str = "pallas"):
@@ -141,7 +143,6 @@ class ConvNetEngine:
         from repro.core.network import make_int8_program
         from repro.core.scheduler import MultiCoreScheduler, SchedulerConfig
 
-        assert batch % max(n_cores, 1) == 0, (batch, n_cores)
         self.qnet = qnet
         self.batch = batch
         self.input_shape = qnet.plan.input_shape

@@ -73,6 +73,20 @@ def test_wrap8_epilogue_backend_parity():
     np.testing.assert_array_equal(outs[0], outs[1])
 
 
+def test_backends_agree_on_float_out_scale():
+    """Backend contract regression: PallasBackend.conv(x_f32, out_scale=s)
+    must requantize to int8 exactly like RefBackend — the scale used to be
+    silently dropped on the float path."""
+    from repro.core.convcore import get_backend
+    x = jnp.asarray(RNG.integers(-6, 6, (1, 8, 8, 4)), jnp.float32)
+    w = jnp.asarray(RNG.integers(-3, 3, (3, 3, 4, 4)), jnp.float32)
+    s = jnp.float32(0.1)
+    a = get_backend("pallas").conv(x, w, out_scale=s)
+    r = get_backend("ref").conv(x, w, out_scale=s)
+    assert a.dtype == jnp.int8 and r.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
 def test_vmem_plan_for_paper_layer():
     plan = plan_banks(224, 224, 8, 8, in_bytes=1)
     assert plan.fits_vmem

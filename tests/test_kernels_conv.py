@@ -73,6 +73,10 @@ def test_wrap8_bit_faithful():
     want = ref.conv2d_ref_wrap8(x, wgt)
     assert got.dtype == jnp.int8
     np.testing.assert_array_equal(got, want)
+    # the wrap path has no requantize stage: combining it with out_scale
+    # is a loud contract violation, not a silent drop
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ops.conv2d(x, wgt, wrap8=True, out_scale=jnp.float32(1e-3))
 
 
 def test_bias_preload_equals_post_add():
@@ -158,6 +162,22 @@ def test_int8_fused_epilogue_exact(per_channel):
                                    relu=True, pool=True, out_scale=scale)
     assert got.dtype == jnp.int8
     np.testing.assert_array_equal(got, want)
+
+
+def test_float_out_scale_requantizes():
+    """Regression: float inputs with out_scale used to silently drop the
+    requantize (f32 out while the ref path returned int8).  The fused
+    epilogue now covers the float accumulator path too — integer-valued
+    float inputs make both accumulations exact, so the comparison is
+    bit-strict."""
+    x = jnp.asarray(RNG.integers(-8, 8, (1, 10, 10, 4)), jnp.float32)
+    wgt = jnp.asarray(RNG.integers(-4, 4, (3, 3, 4, 4)), jnp.float32)
+    b = jnp.asarray(RNG.integers(-10, 10, (4,)), jnp.float32)
+    scale = jnp.float32(0.05)
+    got = ops.conv2d(x, wgt, b, relu=True, out_scale=scale)
+    want = ref.conv2d_epilogue_ref(x, wgt, b, relu=True, out_scale=scale)
+    assert got.dtype == jnp.int8 and want.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_int8_stride2_same_exact():

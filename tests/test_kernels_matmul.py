@@ -59,6 +59,23 @@ def test_custom_vjp_matches_reference_grads():
         np.testing.assert_allclose(a, e, rtol=2e-4, atol=2e-4)
 
 
+def test_vjp_rejects_int8_and_promotes_cotangent():
+    """Regression: the VJP used to cast the cotangent with
+    ``g.astype(x.dtype)`` — an int8 forward would silently truncate
+    gradients to int8.  Integer operands now raise, and float operands run
+    the backward GEMMs in f32, casting only the results back."""
+    g = jnp.ones((4, 3), jnp.float32)
+    xi = jnp.asarray(RNG.integers(-128, 128, (4, 5)), jnp.int8)
+    wi = jnp.asarray(RNG.integers(-128, 128, (5, 3)), jnp.int8)
+    with pytest.raises(TypeError, match="float"):
+        ops._matmul_bwd((xi, wi, False), g)
+    xb = _f32(4, 5).astype(jnp.bfloat16)
+    wb = _f32(5, 3).astype(jnp.bfloat16)
+    dx, dw, db = ops._matmul_bwd((xb, wb, True), g)
+    assert dx.dtype == jnp.bfloat16 and dw.dtype == jnp.bfloat16
+    assert db.shape == (3,)
+
+
 def test_bf16_inputs():
     x = _f32(64, 64).astype(jnp.bfloat16)
     w = _f32(64, 32).astype(jnp.bfloat16)

@@ -2,7 +2,10 @@
 math, int8 scale chaining, backend parity, the LeNet acceptance path
 (stride-2 / SAME / fused pool through Pallas vs the float lax reference
 within quantization tolerance), replicated-IP-core scheduling, the
-conv-net serving engine, and the whole-network §5.2 cycle model."""
+conv-net serving engine, the whole-network §5.2 cycle model, and the
+residual-graph (DAG) path: add/concat merge nodes, the shared-grid int8
+residual add, and resnet ref↔pallas bit-exactness under every scheduler
+mode."""
 
 import jax
 import jax.numpy as jnp
@@ -303,6 +306,37 @@ def test_network_perf_report():
     assert fb["gops_paper"] == pytest.approx(4.48, rel=0.05)
 
 
+def test_batch_mode_pads_ragged_batches():
+    """batch mode used to assert n % cores == 0; ragged batches now pad to
+    the next core multiple and slice the padding back off."""
+    plan, params, x = _lenet_setup(batch=5)
+    qnet = network.quantize_network(plan, params, x)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))
+    sched = scheduler.MultiCoreScheduler(
+        scheduler.SchedulerConfig(n_cores=2))
+    got = sched.run(program, x)
+    assert got.shape[0] == 5
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(program(x)))
+
+
+def test_backend_registry_unregister_and_no_leak():
+    """register_backend has an inverse, and the conftest fixture keeps the
+    global registry clean — sharded backends registered by earlier tests
+    in this module must not still be visible here."""
+    from repro.core.convcore import BACKENDS, unregister_backend
+
+    class Dummy:
+        name = "dummy-backend"
+
+    register_backend(Dummy())
+    assert "dummy-backend" in BACKENDS
+    unregister_backend("dummy-backend")
+    assert "dummy-backend" not in BACKENDS
+    unregister_backend("dummy-backend")            # idempotent
+    assert all("@" not in name for name in BACKENDS), sorted(BACKENDS)
+
+
 def test_psum_count_stride_padding():
     # SAME stride-1: output pixels == input pixels
     assert perfmodel.psum_count(14, 14, 8, 16, 3, 3, 1, "SAME") \
@@ -312,3 +346,302 @@ def test_psum_count_stride_padding():
         == 7 * 7 * 16 * 8
     # VALID unchanged vs the seed accounting
     assert perfmodel.psum_count(224, 224, 8, 8) == 3_154_176
+
+
+# ---------------------------------------------------------------------------
+# Residual / branch-merge graphs (DAG NetworkPlan)
+# ---------------------------------------------------------------------------
+
+
+def _resnet_setup(batch=2, per_channel=False):
+    plan = network.resnet_small()
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(batch, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x,
+                                    per_channel=per_channel)
+    return plan, params, x, qnet
+
+
+def test_resnet_graph_shapes_and_params():
+    plan = network.resnet_small()
+    shapes = plan.activation_shapes()
+    assert shapes[0] == (32, 32, 16)                     # stem
+    assert shapes[-2] == (64,) and shapes[-1] == (10,)
+    names = plan.node_names()
+    ins = plan.resolved_inputs()
+    # the identity-skip merge consumes the block input and the conv branch
+    b1 = names.index("b1")
+    assert set(ins[b1]) == {names.index("stem"), names.index("b1c2")}
+    # projection shortcut: a 1×1 stride-2 conv from the block input
+    b2p = names.index("b2p")
+    assert plan.param_shapes()[b2p] == {"w": (1, 1, 16, 32), "b": (32,)}
+    assert ins[b2p] == (names.index("b1"),)
+    # merge nodes are free in the psum accounting; the projection is not
+    rows = dict(plan.psum_table())
+    assert rows["b1"] == 0 and rows["b2"] == 0 and rows["b2p"] > 0
+
+
+def test_residual_float_oracle_matches_hand_composition():
+    """apply_ref over a residual graph == hand-composed lax ops."""
+    plan = network.NetworkPlan(
+        name="tiny_res", input_shape=(8, 8, 4),
+        layers=(
+            network.conv(8, relu=True, name="a"),
+            network.conv(8, relu=False, name="b"),
+            network.add("a", "b", relu=True),
+            network.global_pool(),
+            network.dense(3),
+        ))
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    got = plan.apply_ref(params, x)
+    a = ref.conv2d_epilogue_ref(x, params[0]["w"], params[0]["b"],
+                                padding="SAME", relu=True)
+    b = ref.conv2d_epilogue_ref(a, params[1]["w"], params[1]["b"],
+                                padding="SAME")
+    h = jnp.maximum(a + b, 0)
+    h = jnp.mean(h, axis=(1, 2))
+    h = h @ params[-1]["w"] + params[-1]["b"]
+    np.testing.assert_allclose(got, h, rtol=1e-5, atol=1e-5)
+
+
+def test_skip_from_network_input():
+    """The reserved name "input" lets a skip reach the network input."""
+    plan = network.NetworkPlan(
+        name="in_skip", input_shape=(6, 6, 4),
+        layers=(
+            network.conv(4, relu=False, name="c"),
+            network.add(network.INPUT, "c", relu=True),
+            network.global_pool(),
+            network.dense(2),
+        ))
+    assert plan.resolved_inputs()[1] == (-1, 0)
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    want = plan.apply_ref(params, x)
+    c = ref.conv2d_epilogue_ref(x, params[0]["w"], params[0]["b"],
+                                padding="SAME")
+    h = jnp.mean(jnp.maximum(x + c, 0), axis=(1, 2))
+    np.testing.assert_allclose(
+        want, h @ params[-1]["w"] + params[-1]["b"], rtol=1e-5, atol=1e-5)
+    qnet = network.quantize_network(plan, params, x)
+    out = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    assert out.shape == (2, 2)
+
+
+def test_add_requant_ref_shared_grid_is_exact():
+    """Both branches on the merge grid → the residual add is exact int8
+    arithmetic; mismatched grids requantize per branch at ≤1 LSB vs the
+    float-domain add (the two rounding orders)."""
+    a = jnp.asarray(RNG.integers(-60, 60, (128,)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-60, 60, (128,)), jnp.int8)
+    same = ref.add_requant_ref(a, b, 1.0, 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(same, np.int32),
+        np.clip(np.asarray(a, np.int32) + np.asarray(b, np.int32),
+                -128, 127))
+    sa, sb, so = 0.02, 0.013, 0.025
+    got = ref.add_requant_ref(a, b, sa / so, sb / so)
+    direct = np.clip(np.round(
+        (np.asarray(a, np.float32) * sa + np.asarray(b, np.float32) * sb)
+        / so), -128, 127)
+    assert np.max(np.abs(np.asarray(got, np.float32) - direct)) <= 1
+
+
+def test_quantize_network_merge_scales():
+    """Every add node carries per-branch requant scales (s_branch/s_out);
+    non-merge nodes carry none."""
+    plan, params, x, qnet = _resnet_setup()
+    for i, sp in enumerate(plan.layers):
+        if sp.kind == "add":
+            ms = qnet.merge_scales[i]
+            assert ms is not None and len(ms) == 2
+            assert all(jnp.ndim(m) == 0 and float(m) > 0 for m in ms)
+        else:
+            assert qnet.merge_scales[i] is None
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_resnet_int8_backends_bit_identical(per_channel):
+    """resnet_small end-to-end int8: pallas and ref produce the SAME
+    network (per-tensor and per-channel scales), and stay within
+    quantization tolerance of the float oracle."""
+    plan, params, x, qnet = _resnet_setup(per_channel=per_channel)
+    a = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))(x)
+    b = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    want = plan.apply_ref(params, x)
+    rel = float(jnp.linalg.norm(a - want) / jnp.linalg.norm(want))
+    assert rel < 0.15, rel
+
+
+@pytest.mark.parametrize("mode", ["batch", "kout", "spatial"])
+def test_resnet_ref_pallas_bit_exact_all_scheduler_modes(mode):
+    """Acceptance: resnet_small is bit-exact ref↔pallas in int8 (with
+    per-channel scales) under every scheduler mode — merge operands stay
+    consistent because each sharded conv concatenates its shards before
+    the add node consumes them."""
+    plan, params, x, qnet = _resnet_setup(per_channel=True)
+    outs = []
+    for backend in ("ref", "pallas"):
+        sched = scheduler.MultiCoreScheduler(
+            scheduler.SchedulerConfig(n_cores=2, mode=mode))
+        name = backend
+        if mode != "batch":
+            sb = sched.shard_backend(backend)
+            register_backend(sb)
+            name = sb.name
+        program = network.make_int8_program(
+            qnet, ConvCoreConfig(backend=name, int8=True))
+        outs.append(sched.run(program, x))
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+def test_resnet_bottleneck_int8_parity():
+    plan = network.resnet_bottleneck()
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    a = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))(x)
+    b = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    want = plan.apply_ref(params, x)
+    rel = float(jnp.linalg.norm(a - want) / jnp.linalg.norm(want))
+    assert rel < 0.15, rel
+
+
+def test_concat_merge_int8_parity():
+    """Branch-merge (inception-style) concat: each branch requantizes onto
+    the merge grid; both backends bit-identical."""
+    plan = network.NetworkPlan(
+        name="widenet", input_shape=(8, 8, 4),
+        layers=(
+            network.conv(8, relu=True, name="trunk"),
+            network.conv(8, kernel=1, relu=True, name="left",
+                         input="trunk"),
+            network.conv(8, kernel=5, relu=True, name="right",
+                         input="trunk"),
+            network.concat("left", "right"),
+            network.global_pool(),
+            network.dense(5),
+        ))
+    assert plan.activation_shapes()[3] == (8, 8, 16)
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    a = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))(x)
+    b = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    want = plan.apply_ref(params, x)
+    rel = float(jnp.linalg.norm(a - want) / jnp.linalg.norm(want))
+    assert rel < 0.2, rel
+
+
+def test_graph_validation_errors():
+    def mk(layers):
+        return network.NetworkPlan("bad", (8, 8, 4), tuple(layers))
+
+    with pytest.raises(ValueError, match="unknown input"):
+        mk([network.conv(8, input="nope")]).resolved_inputs()
+    with pytest.raises(ValueError, match="topologically"):
+        mk([network.conv(8, input="later", name="first"),
+            network.conv(8, name="later")]).resolved_inputs()
+    with pytest.raises(ValueError, match="duplicate"):
+        mk([network.conv(8, name="x"),
+            network.conv(8, name="x")]).node_names()
+    with pytest.raises(ValueError, match="disagree"):
+        mk([network.conv(8, name="a"),
+            network.conv(16, name="b"),
+            network.add("a", "b")]).activation_shapes()
+    with pytest.raises(ValueError, match="share H×W"):
+        mk([network.conv(8, name="a"),
+            network.conv(8, stride=2, name="b", input="a"),
+            network.concat("a", "b")]).activation_shapes()
+    # spatial ops after flatten get a named error, not an unpack traceback
+    with pytest.raises(ValueError, match="needs an \\[H,W,C\\] input"):
+        mk([network.conv(8), network.flatten(),
+            network.maxpool()]).activation_shapes()
+    # fused pool of a sub-2×2 conv output: the shape walk raises the same
+    # error as plan_tiles / conv2d_ws instead of reporting a 0×0 map
+    with pytest.raises(ValueError, match="2×2 pool"):
+        network.NetworkPlan(
+            "t", (3, 3, 4),
+            (network.conv(8, padding="VALID", pool=True),)
+        ).activation_shapes()
+
+
+def test_auto_names_step_aside_for_explicit_names():
+    """A user name matching a later unnamed node's default ("conv1") must
+    not reject the plan: auto names disambiguate instead."""
+    plan = network.NetworkPlan(
+        "t", (8, 8, 4),
+        (network.conv(8, name="conv1"), network.conv(8)))
+    names = plan.node_names()
+    assert names[0] == "conv1" and names[1] != "conv1"
+    assert plan.resolved_inputs() == [(-1,), (0,)]
+    assert plan.activation_shapes() == [(8, 8, 8), (8, 8, 8)]
+
+
+def test_basic_block_projection_for_stride1_width_change():
+    """A stride-1 block that changes width takes project=True and builds a
+    valid graph (identity skips can't change channel count)."""
+    layers = [network.conv(16, relu=True, name="stem")]
+    layers += network._basic_block(1, "stem", 32, 1, project=True)
+    plan = network.NetworkPlan("t", (8, 8, 4), tuple(layers))
+    shapes = plan.activation_shapes()
+    assert shapes[plan.node_names().index("b1")] == (8, 8, 32)
+
+
+def test_forward_activations_release_dead_nodes():
+    """The eager oracle walk frees each activation after its last
+    consumer — a straight-line plan holds exactly ONE live activation at
+    every step (calibrating large_map must not retain every layer's
+    feature map simultaneously)."""
+    plan, params, x = _lenet_setup(batch=1)
+    gen = plan.forward_activations(params, x)
+    out = None
+    for i, sp, p, h in gen:
+        acts = gen.gi_frame.f_locals["acts"]
+        live = [j for j, a in enumerate(acts) if a is not None]
+        assert live == [i], (i, live)
+        out = h
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(plan.apply_ref(params, x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_make_int8_program_rejects_short_tile_plans():
+    """A tile_plans override with one entry per CONV (instead of one per
+    node) must fail loudly, not silently compile a truncated network."""
+    plan, params, x = _lenet_setup(batch=1)
+    qnet = network.quantize_network(plan, params, x)
+    short = [tp for tp in plan.tile_plans() if tp is not None]
+    with pytest.raises(ValueError, match="one entry per node"):
+        network.make_int8_program(
+            qnet, ConvCoreConfig(backend="ref", int8=True),
+            tile_plans=short)
+
+
+def test_float_tail_after_last_param_layer():
+    """Feature-extractor plans (shape-only nodes after the final
+    parametric layer) quantize and run: the dequantized float tail
+    propagates a None scale through pool/globalpool instead of raising."""
+    plan = network.NetworkPlan(
+        name="fx", input_shape=(8, 8, 4),
+        layers=(network.conv(8, relu=True), network.global_pool()))
+    params = plan.init_params(RNG)
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    out = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="ref", int8=True))(x)
+    assert out.dtype == jnp.float32 and out.shape == (2, 8)
+    want = plan.apply_ref(params, x)
+    rel = float(jnp.linalg.norm(out - want) / jnp.linalg.norm(want))
+    assert rel < 0.1, rel

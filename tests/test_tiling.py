@@ -193,6 +193,32 @@ def test_tileplan_working_set_separates_acc():
     assert p.acc_block_bytes == p.h_tile * p.w_tile * (8 // p.kout_banks) * 4
 
 
+def test_pooled_tiny_output_planner_and_kernel_agree():
+    """Regression: plan_tiles(pool=True) used to clamp a 1×1 conv output
+    to a phantom 2×2 pooled map — reporting nonzero tile traffic for a
+    layer conv2d_ws rejects.  Planner and kernel now raise the same
+    error."""
+    with pytest.raises(ValueError, match="2×2 pool"):
+        plan_tiles(3, 3, 4, 4, padding="VALID", pool=True, in_bytes=1)
+    x, w = _i8(1, 3, 3, 4), _i8(3, 3, 4, 4)       # VALID → 1×1 conv output
+    with pytest.raises(ValueError, match="2×2 pool"):
+        conv2d_ws(x, w, pool=True, interpret=True)
+    # 2×2 output is the smallest legal pooled map: both accept it
+    p = plan_tiles(4, 4, 4, 4, padding="VALID", pool=True, in_bytes=1)
+    assert (p.out_h, p.out_w) == (2, 2)
+
+
+def test_resnet_tile_plans_compile():
+    """Residual-graph plans route per-node input shapes into the planner:
+    every conv (including 1×1 projection shortcuts) gets a fitting plan."""
+    for plan in (network.resnet_small(), network.resnet_bottleneck()):
+        tps = plan.tile_plans()
+        convs = [tp for tp in tps if tp is not None]
+        assert len(convs) == sum(
+            1 for sp in plan.layers if sp.kind == "conv")
+        assert all(tp.fits_vmem for tp in convs), plan.name
+
+
 # ---------------------------------------------------------------------------
 # ConvCore planning + spatial-sharded scheduler
 # ---------------------------------------------------------------------------
