@@ -22,6 +22,15 @@ graph with minimal iterations — the CI fast path.  The large-map row is
 measured with iters=1/warmup=0 (interpret mode is slow), so treat its
 measured_us as indicative — the modelled FPGA times are the stable
 cross-PR signal.
+
+Train-step rows: one jitted ``training.make_train_step`` step (forward
+through the WS kernels + backward through the transposed-conv /
+weight-grad kernels + AdamW), measured per batch and priced by
+``perfmodel.train_report`` (≈3× forward psums + dW traffic).  The full
+run ALWAYS writes them into the ``train`` section of
+``BENCH_network.json`` (so a flagless run can never silently drop the
+tracked training trajectory); ``--train`` opts the fast ``--smoke`` path
+into one train-step row as well.
 """
 
 from __future__ import annotations
@@ -35,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_util import emit, time_fn
-from repro.core import network
+from repro.core import network, training
 from repro.core.convcore import ConvCoreConfig
 
 BATCH = 4
@@ -85,7 +94,48 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
     }
 
 
-def run(smoke: bool = False):
+def _bench_train(plan: network.NetworkPlan, rng, batch: int = BATCH,
+                 iters: int = 3, warmup: int = 1, qat: bool = True) -> dict:
+    """Time one jitted QAT train step (fwd WS kernels + bwd WS kernels +
+    AdamW) and put the §5.2 train-step model alongside it."""
+    x, y = training.synthetic_digits(
+        rng, max(batch * 2, 16), input_shape=plan.input_shape,
+        classes=plan.activation_shapes()[-1][-1])
+    cfg = training.TrainConfig(qat=qat)
+    step = training.make_train_step(plan, cfg)
+    state = training.init_train_state(plan, rng)
+
+    def one_step():
+        nonlocal state
+        state, m = step(state, x[:batch], y[:batch])
+        return m["loss"]
+
+    us = time_fn(one_step, iters=iters, warmup=warmup)
+    rep = plan.train_report()
+    fb = rep["full_board"]
+    steps_s = 1e6 / us
+    emit(f"train/{plan.name}", us,
+         f"steps_s={steps_s:.2f};qat={int(qat)};"
+         f"model_ms={rep['seconds']*1e3:.3f};"
+         f"model_ms_20core={fb['seconds']*1e3:.3f};"
+         f"bwd_frac={rep['backward']['cycles']/max(rep['cycles'],1):.3f}")
+    return {
+        "name": plan.name,
+        "batch": batch,
+        "qat": qat,
+        "measured_us_per_step": us,
+        "steps_per_s": steps_s,
+        "model_psums_step": rep["psums"],
+        "model_seconds_1core": rep["seconds"],
+        "model_gops_1core": rep["gops_paper"],
+        "model_seconds_20core": fb["seconds"],
+        "model_gops_20core": fb["gops_paper"],
+        "backward_cycle_fraction":
+            rep["backward"]["cycles"] / max(rep["cycles"], 1),
+    }
+
+
+def run(smoke: bool = False, train: bool = False):
     rng = np.random.default_rng(3)
     if smoke:
         # CI fast path: LeNet + the residual-graph compiler (resnet) with
@@ -94,6 +144,9 @@ def run(smoke: bool = False):
         _bench_plan(network.lenet(), rng, batch=2, iters=1, warmup=1)
         _bench_plan(network.resnet_small(), rng, batch=2, iters=1,
                     warmup=1)
+        if train:
+            _bench_train(network.lenet(input_shape=(12, 12, 1)), rng,
+                         batch=2, iters=1, warmup=1)
         return
     results = [_bench_plan(network.lenet(), rng),
                _bench_plan(network.vgg_small(), rng),
@@ -105,6 +158,14 @@ def run(smoke: bool = False):
     payload = {"backend": jax.default_backend(),
                "interpret": jax.default_backend() != "tpu",
                "networks": results}
+    # train-step rows: the QAT trainer through the backward WS kernels.
+    # Always part of the full run — the tracked JSON must not lose its
+    # training trajectory just because a flag was omitted.
+    payload["train"] = [
+        _bench_train(network.lenet(input_shape=(12, 12, 1)), rng),
+        _bench_train(network.resnet_small(input_shape=(16, 16, 4)),
+                     rng, batch=2, iters=2),
+    ]
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     emit("network/json", 0.0, f"path={OUT_PATH}")
@@ -112,4 +173,4 @@ def run(smoke: bool = False):
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run(smoke="--smoke" in sys.argv)
+    run(smoke="--smoke" in sys.argv, train="--train" in sys.argv)

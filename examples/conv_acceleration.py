@@ -4,8 +4,11 @@ datapath, banked Pallas kernel, and the cycle-accurate performance model
 reproducing the paper's 0.224 / 4.48 GOPS numbers — then the network
 executor: a LeNet-style int8 ``NetworkPlan`` compiled into one jitted
 multi-layer program and scheduled over replicated (virtual) IP cores,
-and a ResNet-style residual graph (skip connections as shared-grid int8
-merge adds) served through ``ConvNetEngine``.
+a ResNet-style residual graph (skip connections as shared-grid int8
+merge adds) served through ``ConvNetEngine``, and the training subsystem:
+a tiny LeNet fit on synthetic digits with quantization-aware training
+(backward pass through the weight-stationary transposed-conv /
+weight-grad kernels), then dropped into the int8 deployment pipeline.
 
 Paper → TPU mapping of the network path:
 * one FPGA IP core processing "a convolutional layer at a time"  ↔  one
@@ -26,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ConvCore, ConvCoreConfig, network, paper_workload, scheduler
+from repro.core import (ConvCore, ConvCoreConfig, network, paper_workload,
+                        scheduler, training)
 from repro.core.banking import plan_banks
 from repro.core.perfmodel import (IPCoreConfig, gops_macs, gops_paper,
                                   psum_count, seconds, tpu_conv_roofline)
@@ -158,6 +162,37 @@ def main():
     print(f"  model w/ tile+halo DMA pricing: {rep_t['seconds']*1e3:.3f} ms"
           f" @112MHz; full board {rep_t['full_board']['seconds']*1e3:.3f} ms"
           f" (shared-DDR floor keeps 20-core GOPS honest)")
+
+    # --- training: QAT on the float shadow → the int8 deployment pipeline.
+    # The backward pass runs the SAME weight-stationary dataflow: input
+    # gradients as a zero-insertion-dilated transposed conv through
+    # conv2d_ws, weight gradients as KH·KW batched-correlation WS GEMMs
+    # (kernels/conv2d_ws_bwd.py, wired in by ops.conv2d's custom VJP) ----
+    tiny = network.lenet(input_shape=(12, 12, 1))
+    print(f"\n=== training: {tiny.name} {tiny.input_shape} on synthetic "
+          "digits (QAT float shadow)")
+    rng = np.random.default_rng(11)
+    x_tr, y_tr = training.synthetic_digits(rng, 384)
+    x_ev, y_ev = training.synthetic_digits(rng, 192)
+    t0 = time.time()
+    state, hist = training.fit(tiny, x_tr, y_tr, steps=50, batch=32,
+                               cfg=training.TrainConfig(qat=True), seed=12)
+    float_acc = float(training.accuracy(
+        training.float_forward(tiny, state.params, x_ev), y_ev))
+    print(f"50 QAT steps in {time.time()-t0:.1f}s: loss "
+          f"{hist[0]['loss']:.2f} → {hist[-1]['loss']:.3f}; float shadow "
+          f"eval acc {float_acc:.3f}")
+    # trained weights drop straight into the int8 pipeline
+    qtiny = network.quantize_network(tiny, state.params, x_tr[:128])
+    prog_tiny = network.make_int8_program(
+        qtiny, ConvCoreConfig(backend="pallas", int8=True))
+    int8_acc = float(training.accuracy(prog_tiny(x_ev), y_ev))
+    print(f"deployed int8 eval acc {int8_acc:.3f} "
+          f"(Δ {float_acc - int8_acc:+.3f} vs the float shadow)")
+    rep_tr = tiny.train_report()
+    print(f"train-step model: {rep_tr['seconds']*1e3:.3f} ms @112MHz "
+          f"({rep_tr['backward']['cycles']/rep_tr['cycles']:.0%} backward; "
+          f"≈3× forward psums — perfmodel.train_report)")
 
 
 if __name__ == "__main__":

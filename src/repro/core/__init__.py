@@ -15,14 +15,19 @@ from one layer to whole networks.
                                 tile-revisit / halo-re-read DMA pricing
 * banking                     — BRAM↔VMEM bank + spatial-tile planning
                                 (§4.1 → TilePlan), stride/padding-aware
-* quantize                    — the 8-bit datapath as reusable substrate
+* quantize                    — the 8-bit datapath as reusable substrate,
+                                incl. the QAT fake-quantize STE
+* training                    — float-shadow / QAT trainer over NetworkPlan
+                                DAGs through the WS kernels' custom VJPs
 """
 
 from repro.core.convcore import (Backend, ConvCore, ConvCoreConfig,
                                  get_backend, paper_workload,
                                  register_backend, unregister_backend)
-from repro.core import banking, network, perfmodel, quantize, scheduler
+from repro.core import (banking, network, perfmodel, quantize, scheduler,
+                        training)
 
 __all__ = ["Backend", "ConvCore", "ConvCoreConfig", "get_backend",
            "paper_workload", "register_backend", "unregister_backend",
-           "banking", "network", "perfmodel", "quantize", "scheduler"]
+           "banking", "network", "perfmodel", "quantize", "scheduler",
+           "training"]

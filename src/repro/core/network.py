@@ -46,6 +46,11 @@ one device) or vmapped virtual cores; core/perfmodel.network_report sums
 the §5.2 cycle model over the plan's nodes, including the 20-core
 configuration (branches serialize on the single core, so the DAG's cost
 is still the sum of its nodes).
+
+Training: core/training.py trains the float shadow of any plan through
+the WS kernels' custom VJPs (QAT-aware), and the trained parameters feed
+straight back into ``quantize_network`` → ``make_int8_program``;
+:meth:`NetworkPlan.train_report` prices a train step on the §5.2 model.
 """
 
 from __future__ import annotations
@@ -396,6 +401,22 @@ class NetworkPlan:
         single core, so the sum over nodes is the schedule length."""
         return perfmodel.network_report(self.psum_table(), cfg,
                                         tile_plans=tile_plans)
+
+    def train_report(self, cfg: perfmodel.IPCoreConfig =
+                     perfmodel.IPCoreConfig(),
+                     tile_plans: Optional[Sequence] = None) -> dict:
+        """The §5.2 cycle model of one TRAINING step over this plan:
+        forward + backward ≈ 3× the forward psums (input-gradient
+        transposed conv + weight-gradient correlation each match the
+        forward count — perfmodel.train_report), with the f32
+        weight-gradient writeback traffic of every parametric node priced
+        against the shared DMA interface."""
+        wbytes = [None if shp is None else
+                  4 * (int(np.prod(shp["w"])) + int(np.prod(shp["b"])))
+                  for shp in self.param_shapes()]
+        return perfmodel.train_report(self.psum_table(), cfg,
+                                      weight_bytes=wbytes,
+                                      tile_plans=tile_plans)
 
     # -- execution ----------------------------------------------------------
 

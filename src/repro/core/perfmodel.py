@@ -169,6 +169,83 @@ def network_report(layers: Sequence[Tuple[str, int]],
     }
 
 
+def train_report(layers: Sequence[Tuple[str, int]],
+                 cfg: IPCoreConfig = IPCoreConfig(),
+                 weight_bytes: Optional[Sequence[int]] = None,
+                 full_board_cores: int = 20,
+                 tile_plans: Optional[Sequence] = None) -> dict:
+    """§5.2 cycle model of one TRAINING step over a layer list
+    [(name, forward_psums_per_image), ...].
+
+    Backward accounting on the weight-stationary dataflow
+    (kernels/conv2d_ws_bwd.py):
+
+    * the input gradient is a transposed conv with the SAME psum count as
+      the forward pass — every forward psum has exactly one transposed
+      counterpart (one cotangent pixel × kernel tap × channel);
+    * the weight gradient is a batched correlation contracting the same
+      (output pixel × kernel × channel) index set — again one psum per
+      forward psum;
+
+    so the backward pass costs ≈2× the forward psums, and a full step
+    (forward + backward) ≈3× — the classic conv-training rule of thumb,
+    here exact in the paper's psum accounting.  ``weight_bytes`` (per
+    layer, e.g. 4·|W| for f32 gradients; None entries for parameter-free
+    nodes) adds the weight-GRADIENT writeback traffic on the shared DMA
+    interface — unlike inference, every layer pass must ship dW back to
+    the host optimizer, and for fat dense layers that traffic, not
+    compute, bounds the backward pass.  Per-layer backward cycles are
+    max(compute, dW DMA), the M4 overlap argument applied to the
+    gradient stream.
+
+    ``tile_plans`` prices the forward exactly like ``network_report``
+    (tile revisits + halo re-reads); the backward input/weight streams
+    revisit the same tiles, which the 2× psum accounting already covers
+    at compute level."""
+    fwd = network_report(layers, cfg, full_board_cores=full_board_cores,
+                         tile_plans=tile_plans)
+    board = replace(cfg, ip_cores=full_board_cores)
+    if weight_bytes is None:
+        weight_bytes = [None] * len(layers)
+    bwd_rows: List[dict] = []
+    bwd_total = bwd_board = 0
+    for (name, p), wb in zip(layers, weight_bytes):
+        compute = cycles(2 * p, cfg) if p else 0
+        compute_board = cycles(2 * p, board) if p else 0
+        row = {"name": name, "psums_bwd": 2 * p, "cycles": compute}
+        if wb:
+            dma = dma_cycles(wb, cfg)
+            row.update(dw_bytes=wb, dw_dma_cycles=dma,
+                       cycles=max(compute, dma))
+            bwd_total += row["cycles"]
+            bwd_board += max(compute_board, dma)   # shared DMA interface
+        else:
+            bwd_total += compute
+            bwd_board += compute_board
+        bwd_rows.append(row)
+    total = fwd["cycles"] + bwd_total
+    total_board = fwd["full_board"]["cycles"] + bwd_board
+    step_psums = 3 * fwd["psums"]
+    return {
+        "forward": fwd,
+        "backward": {"layers": bwd_rows, "psums": 2 * fwd["psums"],
+                     "cycles": bwd_total,
+                     "seconds": bwd_total / cfg.clock_hz},
+        "psums": step_psums,
+        "cycles": total,
+        "seconds": total / cfg.clock_hz,
+        "gops_paper": step_psums / (total / cfg.clock_hz) / 1e9 if total
+        else 0.0,
+        "full_board": {
+            "ip_cores": full_board_cores,
+            "cycles": total_board,
+            "seconds": total_board / board.clock_hz,
+            "gops_paper": step_psums / (total_board / board.clock_hz) / 1e9
+            if total_board else 0.0,
+        },
+    }
+
+
 def tpu_conv_roofline(h: int, w: int, c: int, k: int, kh: int = 3,
                       kw: int = 3, in_bytes: int = 1,
                       peak_flops: float = 197e12 / 2,  # int8 ≈ bf16 on v5e MXU

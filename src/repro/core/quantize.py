@@ -64,6 +64,49 @@ def act_scale_from_calibration(x_f32: jax.Array) -> jax.Array:
     return jnp.maximum(amax, 1e-12) / 127.0
 
 
+# ---------------------------------------------------------------------------
+# Quantization-aware training (straight-through fake quantization)
+# ---------------------------------------------------------------------------
+
+
+def fake_quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize-dequantize onto the symmetric int8 grid with a
+    straight-through estimator: the forward value is the exact int8
+    round-trip (round, saturate to ±127, rescale) — what the deployed
+    8-bit datapath will compute — while the backward pass treats the
+    rounding as identity (the STE), so gradients flow to the float master
+    weights.  ``scale`` is stop-gradiented: QAT learns values ON a grid,
+    not the grid itself (the deployment scale is recalibrated by
+    ``quantize_network``)."""
+    s = jax.lax.stop_gradient(jnp.asarray(scale, jnp.float32))
+    q = jnp.clip(jnp.round(x / s), -127, 127) * s
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant_weight(w: jax.Array, per_channel: bool = False) -> jax.Array:
+    """Fake-quantize a weight tensor exactly the way ``quantize_network``
+    will lower it: symmetric max|w|/127 scale, per tensor or per output
+    channel (the last axis — conv [KH,KW,C,K] and dense [C,K] alike), so
+    the QAT forward sees the deployment grid."""
+    wf = w.astype(jnp.float32)
+    if per_channel:
+        amax = jnp.max(jnp.abs(wf), axis=tuple(range(w.ndim - 1)),
+                       keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(wf))
+    scale = jnp.maximum(jax.lax.stop_gradient(amax), 1e-12) / 127.0
+    return fake_quantize(wf, scale).astype(w.dtype)
+
+
+def fake_quant_act(x: jax.Array) -> jax.Array:
+    """Fake-quantize an activation on its per-batch symmetric scale
+    (``act_scale_from_calibration`` of the current batch, stop-gradiented)
+    — the QAT stand-in for the calibrated activation grids the int8
+    program chains through its fused requantize epilogues."""
+    scale = act_scale_from_calibration(jax.lax.stop_gradient(x))
+    return fake_quantize(x, scale)
+
+
 def quantized_matmul(x: jax.Array, wq: Quantized,
                      use_kernel: bool = True) -> jax.Array:
     """w8a8 GEMM: quantize activations per-tensor, int8×int8→int32 through

@@ -3,6 +3,10 @@ the public jit'd wrappers and ref.py for the pure-jnp oracles).
 
 * conv2d_ws        — the paper's IP core: channel-banked, weight-stationary,
                      bias-preloaded blocked convolution (+int8/wrap8 modes)
+* conv2d_ws_bwd    — the conv backward pass on the same dataflow: input
+                     grads as a dilated transposed conv through conv2d_ws,
+                     weight grads as batched-correlation WS GEMMs (wired
+                     into ops.conv2d's custom VJP for training)
 * matmul_ws        — the same dataflow generalized to transformer GEMMs
                      (custom VJP for training use)
 * flash_attention  — beyond-paper: flash attention with the paper's

@@ -1,0 +1,131 @@
+"""Backward pass of the paper's IP core through the SAME weight-stationary
+dataflow — the conv gradients an FPGA-trained deployment would compute
+on-accelerator (DESIGN.md §3; ROADMAP "conv backward pass").
+
+Two kernels, both re-statements of the forward architecture rather than
+new dataflows:
+
+* **input gradient** = a transposed convolution, executed as
+  zero-insertion dilation of the cotangent + spatial kernel flip +
+  channel-axis swap, then the ORDINARY stride-1 forward kernel
+  (``conv2d_ws``) with "full" padding.  This literally reuses the halo'd
+  spatial-tile grid machinery: the dilated cotangent streams through the
+  same (N, h_tiles, w_tiles, kout, cin) grid, with the cotangent's K
+  channels playing the cin-bank role and the input's C channels the
+  kout-bank role.  Rows the strided forward never reached appear as
+  negative "full" padding — folded into a slice of the dilated map
+  because the image-BRAM zero margins can only add, never remove.
+
+* **weight gradient** = a batched correlation: tap (dy,dx) of dW is the
+  GEMM  x_window(dy,dx)ᵀ @ g  contracting over N·OH·OW, so the whole
+  weight gradient is KH·KW weight-stationary GEMMs (``matmul_ws`` — the
+  same MXU dataflow the forward's "9 MACs per PCORE" decomposition uses,
+  with the roles of weights and activations exchanged: now the cotangent
+  block stays VMEM-resident while the image stream flows past it).
+
+The fused-epilogue backward (ReLU mask, 2×2 max-pool argmax routing)
+lives in kernels/ref.py (`relu_mask_ref` / `maxpool2x2_bwd_ref`); ops.py
+wires all three into ``conv2d``'s custom VJP with residuals that carry
+the epilogue masks instead of the full accumulator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_ws import conv2d_ws
+from repro.kernels.matmul_ws import matmul_ws
+from repro.kernels.ref import normalize_padding
+
+
+def _divisor_banks(dim: int, want: int) -> int:
+    """Largest bank count ≤ want dividing dim (mirrors banking.divisor_banks
+    without importing core — kernels stay below core in the layering)."""
+    b = max(1, min(want, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
+def conv2d_ws_input_grad(g, w, x_shape, *, stride: int = 1,
+                         padding="VALID", cin_banks: int = 4,
+                         kout_banks: int = 4, h_tile: int = 0,
+                         w_tile: int = 0, interpret: bool = False):
+    """dL/dx [N,H,W,C] from cotangent ``g`` [N,OH,OW,K] and weights ``w``
+    [KH,KW,C,K], through the forward WS kernel:
+
+    1. zero-insertion-dilate ``g`` by the forward stride (the transposed
+       conv's lhs dilation, materialized the way the FPGA would write a
+       sparse map into its image BRAMs);
+    2. flip the kernel spatially and swap its channel axes → [KH,KW,K,C];
+    3. run ``conv2d_ws`` at stride 1 under "full" padding
+       (kh−1−pt …), slicing the dilated map first wherever the full
+       padding is negative (forward padding larger than the kernel).
+
+    ``h_tile``/``w_tile`` tile the OUTPUT map (= the forward input), so
+    gradient maps larger than VMEM stream through the same halo'd blocks
+    as the forward pass.
+    """
+    n, h, w_dim, c = x_shape
+    kh, kw, c2, k = w.shape
+    assert c == c2, (c, c2)
+    assert g.shape[0] == n and g.shape[3] == k, (g.shape, x_shape, w.shape)
+    (pt, _), (pl_, _) = normalize_padding(padding, kh, kw, stride, h, w_dim)
+    oh, ow = g.shape[1], g.shape[2]
+
+    gf = g.astype(jnp.float32)
+    if stride > 1:
+        gd = jnp.zeros((n, (oh - 1) * stride + 1, (ow - 1) * stride + 1, k),
+                       jnp.float32)
+        gd = gd.at[:, ::stride, ::stride, :].set(gf)
+    else:
+        gd = gf
+    # full padding of the transposed conv; negative entries (forward pad
+    # beyond the kernel extent) become slices of the dilated map
+    pads = [kh - 1 - pt, h + pt - (oh - 1) * stride - 1,
+            kw - 1 - pl_, w_dim + pl_ - (ow - 1) * stride - 1]
+    if min(pads) < 0:
+        top, bot, left, right = (max(0, -p) for p in pads)
+        gd = gd[:, top:gd.shape[1] - bot, left:gd.shape[2] - right, :]
+        pads = [max(0, p) for p in pads]
+    wt = jnp.flip(w, (0, 1)).swapaxes(2, 3).astype(jnp.float32)
+
+    return conv2d_ws(
+        gd, wt, None, stride=1,
+        padding=((pads[0], pads[1]), (pads[2], pads[3])),
+        cin_banks=_divisor_banks(k, cin_banks),
+        kout_banks=_divisor_banks(c, kout_banks),
+        h_tile=h_tile, w_tile=w_tile, interpret=interpret)
+
+
+def conv2d_ws_weight_grad(x, g, kh: int, kw: int, *, stride: int = 1,
+                          padding="VALID", interpret: bool = False):
+    """dL/dw [KH,KW,C,K] from input ``x`` [N,H,W,C] and cotangent ``g``
+    [N,OH,OW,K], as KH·KW weight-stationary GEMMs: tap (dy,dx) contracts
+    the strided input window starting at (dy,dx) with the cotangent over
+    the N·OH·OW stream —
+
+        dW[dy,dx] = x_window(dy,dx)ᵀ [C, N·OH·OW] @ g [N·OH·OW, K]
+
+    the batched-correlation form of the weight gradient, on the same MXU
+    dataflow as the forward's shifted-matmul decomposition (the cotangent
+    block is the stationary operand of each GEMM)."""
+    n, h, w_dim, c = x.shape
+    assert g.shape[0] == n, (x.shape, g.shape)
+    oh, ow, k = g.shape[1], g.shape[2], g.shape[3]
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h,
+                                            w_dim)
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    gm = g.astype(jnp.float32).reshape(n * oh * ow, k)
+    taps = []
+    for dy in range(kh):
+        for dx in range(kw):
+            xs = jax.lax.slice(
+                xp, (0, dy, dx, 0),
+                (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
+                 c), (1, stride, stride, 1))
+            xm = xs.reshape(n * oh * ow, c)
+            taps.append(matmul_ws(xm.T, gm, interpret=interpret))
+    return jnp.stack(taps).reshape(kh, kw, c, k)

@@ -5,18 +5,27 @@
   this container uses; on TPU the same call compiles natively);
 * ``matmul_ws`` carries a custom VJP so the paper-dataflow GEMM is usable
   inside training graphs (backward = two more WS-GEMMs);
-* ``conv2d`` adds the requantization / wrap8 modes of the 8-bit datapath.
+* ``conv2d`` adds the requantization / wrap8 modes of the 8-bit datapath,
+  and carries a custom VJP on the float accumulator path: the backward
+  kernels (kernels/conv2d_ws_bwd.py) run the same weight-stationary
+  dataflow, and the residuals store the fused-epilogue MASKS (ReLU sign
+  bits, 2×2-pool argmax indices) instead of a second copy of the
+  accumulator, so stride/padding/epilogue configs differentiate
+  bit-consistently with the ref oracle.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import conv2d_ws as _conv_mod
+from repro.kernels import conv2d_ws_bwd as _bwd_mod
 from repro.kernels import matmul_ws as _mm_mod
+from repro.kernels import ref as _ref
 
 
 def _interpret() -> bool:
@@ -41,11 +50,11 @@ def _matmul_fwd_impl(x, w, bias):
 
 
 def _matmul_fwd(x, w, bias):
-    return _matmul_fwd_impl(x, w, bias), (x, w, bias is not None)
+    return _matmul_fwd_impl(x, w, bias), (x, w, bias)
 
 
 def _matmul_bwd(res, g):
-    x, w, has_bias = res
+    x, w, bias = res
     if not (jnp.issubdtype(x.dtype, jnp.floating)
             and jnp.issubdtype(w.dtype, jnp.floating)):
         raise TypeError(
@@ -59,7 +68,12 @@ def _matmul_bwd(res, g):
                            interpret=_interpret()).astype(x.dtype)
     dw = _mm_mod.matmul_ws(x.T.astype(jnp.float32), gf,
                            interpret=_interpret()).astype(w.dtype)
-    db = jnp.sum(g, axis=0) if has_bias else None
+    # bias grad reduces in f32 and only the RESULT casts to the bias dtype:
+    # summing the raw cotangent rounds every partial sum to the cotangent
+    # dtype, and an f32 master bias fed bf16 cotangents would silently get
+    # a bf16-rounded gradient
+    db = (jnp.sum(gf, axis=0).astype(bias.dtype)
+          if bias is not None else None)
     return dx, dw, db
 
 
@@ -69,6 +83,85 @@ matmul_ws.defvjp(_matmul_fwd, _matmul_bwd)
 # ---------------------------------------------------------------------------
 # Convolution (the IP core entry point)
 # ---------------------------------------------------------------------------
+
+
+class _ConvCfg(NamedTuple):
+    """Hashable static config of one conv layer pass (the nondiff argument
+    of the custom VJP; padding is pre-resolved to explicit form so SAME
+    needs no shape context in the backward rules)."""
+    stride: int
+    padding: Tuple[Tuple[int, int], Tuple[int, int]]
+    cin_banks: int
+    kout_banks: int
+    h_tile: int
+    w_tile: int
+    relu: bool
+    pool: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv2d_float(cfg: _ConvCfg, x, w, bias):
+    """Float-accumulator conv with the fused ReLU → 2×2-max-pool epilogue
+    and a paper-dataflow backward (see _conv2d_float_bwd)."""
+    return _conv_mod.conv2d_ws(x, w, bias, None, stride=cfg.stride,
+                               padding=cfg.padding, cin_banks=cfg.cin_banks,
+                               kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
+                               w_tile=cfg.w_tile, relu=cfg.relu,
+                               pool=cfg.pool, interpret=_interpret())
+
+
+def _conv2d_float_fwd(cfg: _ConvCfg, x, w, bias):
+    """Run the kernel WITHOUT the epilogue to expose the f32 accumulator,
+    then apply ReLU/pool at the jnp level — bit-identical to the fused
+    epilogue (same maximum ops on the same accumulator values) — and keep
+    only the epilogue MASKS as residuals: the ReLU sign bits and the pool
+    argmax indices, 1 byte each per accumulator cell instead of 4."""
+    acc = _conv_mod.conv2d_ws(x, w, bias, None, stride=cfg.stride,
+                              padding=cfg.padding, cin_banks=cfg.cin_banks,
+                              kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
+                              w_tile=cfg.w_tile, interpret=_interpret())
+    relu_mask = pool_idx = None
+    y = acc
+    if cfg.relu:
+        relu_mask = _ref.relu_mask_ref(acc)
+        y = jnp.maximum(y, 0)
+    if cfg.pool:
+        oh, ow = acc.shape[1], acc.shape[2]
+        if oh < 2 or ow < 2:
+            # the epilogue-disabled kernel call above skipped conv2d_ws's
+            # own check — differentiation must fail exactly like the
+            # primal, not train on an empty pooled map
+            raise ValueError(
+                f"2×2 pool needs a ≥2×2 conv output, got {oh}×{ow}")
+        pool_idx = _ref.maxpool2x2_argmax_ref(y)
+        y = _ref.maxpool2d_ref(y, 2)
+    return y, (x, w, bias, relu_mask, pool_idx, acc.shape)
+
+
+def _conv2d_float_bwd(cfg: _ConvCfg, res, g):
+    x, w, bias, relu_mask, pool_idx, acc_shape = res
+    # walk the epilogue backwards: pool argmax routing → ReLU mask → the
+    # accumulator cotangent the WS backward kernels consume
+    dacc = g.astype(jnp.float32)
+    if cfg.pool:
+        dacc = _ref.maxpool2x2_bwd_ref(pool_idx, dacc, acc_shape)
+    if cfg.relu:
+        dacc = dacc * relu_mask
+    dx = _bwd_mod.conv2d_ws_input_grad(
+        dacc, w, x.shape, stride=cfg.stride, padding=cfg.padding,
+        cin_banks=cfg.cin_banks, kout_banks=cfg.kout_banks,
+        h_tile=cfg.h_tile, w_tile=cfg.w_tile,
+        interpret=_interpret()).astype(x.dtype)
+    dw = _bwd_mod.conv2d_ws_weight_grad(
+        x, dacc, w.shape[0], w.shape[1], stride=cfg.stride,
+        padding=cfg.padding, interpret=_interpret()).astype(w.dtype)
+    # like _matmul_bwd: reduce in f32, cast only the result to the bias dtype
+    db = (jnp.sum(dacc, axis=(0, 1, 2)).astype(bias.dtype)
+          if bias is not None else None)
+    return dx, dw, db
+
+
+_conv2d_float.defvjp(_conv2d_float_fwd, _conv2d_float_bwd)
 
 
 def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
@@ -87,12 +180,29 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     instead wraps the accumulator to int8, bit-matching the paper's Fig. 6
     waveform — the wrap path has no requantize stage, so combining it with
     ``out_scale`` is an error rather than a silent drop.
+
+    The float accumulator path (float inputs, no out_scale/wrap8) is
+    differentiable: a custom VJP runs the backward through the same
+    weight-stationary dataflow (kernels/conv2d_ws_bwd.py), with residuals
+    carrying the fused-epilogue masks — so any stride/padding/epilogue
+    config used in a training graph differentiates consistently with the
+    ref oracle.  The int8 and requantized paths stay non-differentiable
+    (an int8 forward has no meaningful int8 gradient; QAT trains the
+    float shadow with straight-through fake quantization instead —
+    core/training.py).
     """
     if wrap8 and out_scale is not None:
         raise ValueError("wrap8 and out_scale are mutually exclusive: the "
                          "Fig. 6 wrap path has no requantize stage")
-    fused_scale = out_scale
-    out = _conv_mod.conv2d_ws(x, w, bias, fused_scale, stride=stride,
+    if (out_scale is None and not wrap8
+            and jnp.issubdtype(jnp.result_type(x), jnp.floating)):
+        pad = _ref.normalize_padding(padding, w.shape[0], w.shape[1],
+                                     stride, x.shape[1], x.shape[2])
+        cfg = _ConvCfg(stride=stride, padding=pad, cin_banks=cin_banks,
+                       kout_banks=kout_banks, h_tile=h_tile, w_tile=w_tile,
+                       relu=relu, pool=pool)
+        return _conv2d_float(cfg, x, w, bias)
+    out = _conv_mod.conv2d_ws(x, w, bias, out_scale, stride=stride,
                               padding=padding, cin_banks=cin_banks,
                               kout_banks=kout_banks, h_tile=h_tile,
                               w_tile=w_tile, relu=relu, pool=pool,

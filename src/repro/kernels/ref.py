@@ -190,6 +190,103 @@ def conv2d_ref_wrap8(x, w, bias=None):
     return out.astype(jnp.int8)
 
 
+# ---------------------------------------------------------------------------
+# Backward-pass oracles (the training contract)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_input_grad_ref(g, w, x_shape, *, stride: int = 1,
+                          padding: Padding = "VALID"):
+    """dL/dx of ``conv2d_ref``: the transposed convolution, stated directly
+    as zero-insertion dilation + kernel flip (NOT via jax.vjp, so it is an
+    independent contract for the WS backward kernel).
+
+    The cotangent ``g`` [N,OH,OW,K] dilates by the forward stride
+    (zero-insertion), the kernel flips spatially and swaps its channel
+    axes ([KH,KW,C,K] → [KH,KW,K,C]), and a stride-1 correlation with
+    "full" padding (kh−1−pt on top, h+pt−(oh−1)·s−1 on the bottom — rows
+    the strided forward never reached get negative padding) recovers
+    [N,H,W,C]."""
+    n, h, w_dim, c = x_shape
+    kh, kw, c2, k = w.shape
+    assert c == c2, (c, c2)
+    (pt, _), (pl_, _) = normalize_padding(padding, kh, kw, stride, h, w_dim)
+    oh, ow = g.shape[1], g.shape[2]
+    wt = jnp.flip(w, (0, 1)).swapaxes(2, 3)
+    return jax.lax.conv_general_dilated(
+        g.astype(jnp.float32), wt.astype(jnp.float32), (1, 1),
+        ((kh - 1 - pt, h + pt - (oh - 1) * stride - 1),
+         (kw - 1 - pl_, w_dim + pl_ - (ow - 1) * stride - 1)),
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv2d_weight_grad_ref(x, g, kh: int, kw: int, *, stride: int = 1,
+                           padding: Padding = "VALID"):
+    """dL/dw of ``conv2d_ref``: a batched correlation — tap (dy,dx) of the
+    weight gradient contracts the stride-strided input window starting at
+    (dy,dx) with the cotangent over (N,OH,OW):
+
+        dW[dy,dx,c,k] = Σ_{n,i,j} x_pad[n, i·s+dy, j·s+dx, c] · g[n,i,j,k]
+    """
+    n, h, w_dim, c = x.shape
+    oh, ow, k = g.shape[1], g.shape[2], g.shape[3]
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h,
+                                            w_dim)
+    xp = jnp.pad(x.astype(jnp.float32),
+                 ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    gf = g.astype(jnp.float32)
+    taps = []
+    for dy in range(kh):
+        for dx in range(kw):
+            xs = jax.lax.slice(
+                xp, (0, dy, dx, 0),
+                (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
+                 c), (1, stride, stride, 1))
+            taps.append(jnp.einsum("nijc,nijk->ck", xs, gf))
+    return jnp.stack(taps).reshape(kh, kw, c, k)
+
+
+def conv2d_bias_grad_ref(g):
+    """dL/db of ``conv2d_ref``: the cotangent summed over (N,OH,OW), in
+    f32 (low-precision cotangents must not round per-partial-sum)."""
+    return jnp.sum(g.astype(jnp.float32), axis=(0, 1, 2))
+
+
+def relu_mask_ref(acc):
+    """The fused-epilogue ReLU backward mask: 1 where the accumulator was
+    strictly positive (the subgradient-at-0 convention jax.grad uses)."""
+    return acc > 0
+
+
+def maxpool2x2_argmax_ref(y):
+    """Per-window argmax of the 2×2/2 max-pool (row-major within the
+    window, first max wins — jnp.argmax semantics).  Trailing odd rows /
+    columns are dropped, matching the fused epilogue's floor semantics.
+    Returns int8 [N, H//2, W//2, C] with values in 0..3 — the pool mask
+    the training residuals carry."""
+    n, h, w, c = y.shape
+    h2, w2 = h // 2, w // 2
+    win = y[:, :h2 * 2, :w2 * 2].reshape(n, h2, 2, w2, 2, c)
+    win = win.transpose(0, 1, 3, 5, 2, 4).reshape(n, h2, w2, c, 4)
+    return jnp.argmax(win, axis=-1).astype(jnp.int8)
+
+
+def maxpool2x2_bwd_ref(idx, g, out_shape):
+    """Backward of the 2×2/2 max-pool given its argmax mask: each window's
+    cotangent routes to the position ``idx`` selected in the forward pass;
+    dropped trailing odd rows/columns get zero.  ``out_shape`` is the
+    pre-pool [N,H,W,C] shape."""
+    n, h, w, c = out_shape
+    h2, w2 = h // 2, w // 2
+    onehot = jax.nn.one_hot(idx.astype(jnp.int32), 4,
+                            dtype=jnp.float32)            # [N,H2,W2,C,4]
+    dwin = g.astype(jnp.float32)[..., None] * onehot
+    dy = dwin.reshape(n, h2, w2, c, 2, 2).transpose(0, 1, 4, 2, 5, 3)
+    dy = dy.reshape(n, h2 * 2, w2 * 2, c)
+    return jnp.pad(dy, ((0, 0), (0, h - h2 * 2), (0, w - w2 * 2), (0, 0)))
+
+
 def matmul_ref(x, w, bias=None, *, accum_dtype=jnp.float32):
     """x: [M,K] @ w: [K,N] + bias."""
     out = jnp.dot(x.astype(accum_dtype), w.astype(accum_dtype),

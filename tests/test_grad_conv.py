@@ -1,0 +1,341 @@
+"""Gradients of the paper-dataflow conv: the custom VJP through the
+weight-stationary backward kernels (kernels/conv2d_ws_bwd.py) against
+
+1. finite differences of the kernel forward itself (directional probes —
+   the ground truth no oracle can fake), swept over every
+   stride × padding × epilogue config the fused kernel supports;
+2. ``jax.grad`` of the differentiable ref oracle (tight float tolerance);
+3. the standalone backward oracles (`conv2d_input_grad_ref` /
+   `conv2d_weight_grad_ref` / `maxpool2x2_bwd_ref`) vs jax.vjp of the
+   forward oracle.
+
+Plus the matmul_ws gradient checks and the bias-gradient precision
+regression (sum in f32, cast to the BIAS dtype)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.conv2d_ws_bwd import (conv2d_ws_input_grad,
+                                         conv2d_ws_weight_grad)
+
+RNG = np.random.default_rng(11)
+
+
+def _f32(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def _fd_directional(loss, args, grads, eps=1e-3, rtol=8e-2, atol=8e-2,
+                    rng=RNG):
+    """Central finite difference along one random direction per argument
+    must match ⟨grad, direction⟩.  Loss evals run in f32; tolerances
+    absorb the f32 eval noise and the measure-zero relu/pool kinks a
+    random direction can graze."""
+    for i, (a, g) in enumerate(zip(args, grads)):
+        d = jnp.asarray(rng.normal(size=a.shape), jnp.float32)
+        plus = [x if j != i else x + eps * d for j, x in enumerate(args)]
+        minus = [x if j != i else x - eps * d for j, x in enumerate(args)]
+        fd = (loss(*plus) - loss(*minus)) / (2 * eps)
+        want = jnp.sum(g * d)
+        np.testing.assert_allclose(
+            float(want), float(fd), rtol=rtol, atol=atol,
+            err_msg=f"finite difference mismatch on argument {i}")
+
+
+# ---------------------------------------------------------------------------
+# The acceptance sweep: every stride × padding × epilogue config
+# ---------------------------------------------------------------------------
+
+
+SWEEP = [(stride, padding, relu, pool)
+         for stride in (1, 2)
+         for padding in ("SAME", "VALID", ((1, 0), (0, 1)))
+         for relu, pool in ((False, False), (True, False), (True, True))]
+
+
+@pytest.mark.parametrize("seed,stride,padding,relu,pool",
+                         [(i, *cfg) for i, cfg in enumerate(SWEEP)])
+def test_conv_grads_fd_and_oracle_sweep(seed, stride, padding, relu, pool):
+    """Finite-difference + oracle-grad check for conv input/weight/bias
+    gradients in every swept stride/padding/epilogue config (the PR's
+    acceptance matrix).  Data is seeded per config so the fd probes are
+    deterministic regardless of test order."""
+    rng = np.random.default_rng(100 + seed)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    kw = dict(stride=stride, padding=padding, relu=relu, pool=pool)
+    out = ops.conv2d(x, w, b, **kw)
+    probe = jnp.asarray(rng.normal(size=out.shape), jnp.float32)
+
+    def loss(x, w, b):
+        return jnp.sum(ops.conv2d(x, w, b, **kw) * probe)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    _fd_directional(loss, [x, w, b], grads, rng=rng)
+
+    # tight tolerance vs jax.grad of the differentiable oracle
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.conv2d_epilogue_ref(x, w, b, **kw) * probe)
+
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for g, wgt in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wgt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_conv_grad_odd_map_pool_floor():
+    """Odd conv outputs: the fused 2×2 pool drops the trailing row/col
+    (floor semantics) — their gradient must be exactly zero."""
+    x, w = _f32(1, 11, 9, 4), _f32(3, 3, 4, 4)
+    kw = dict(stride=1, padding="VALID", relu=True, pool=True)
+    probe = _f32(*ops.conv2d(x, w, **kw).shape)
+
+    def loss(x, w):
+        return jnp.sum(ops.conv2d(x, w, **kw) * probe)
+
+    grads = jax.grad(loss, argnums=(0, 1))(x, w)
+    want = jax.grad(lambda x, w: jnp.sum(
+        ref.conv2d_epilogue_ref(x, w, **kw) * probe), (0, 1))(x, w)
+    for g, wgt in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wgt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_conv_grad_tiled_path():
+    """Gradients through the spatially-tiled kernel (h_tile/w_tile set):
+    the backward input-grad conv reuses the same halo'd-tile machinery."""
+    x, w, b = _f32(1, 16, 14, 4), _f32(3, 3, 4, 8), _f32(8)
+    kw = dict(stride=1, padding="SAME", relu=True, pool=True,
+              h_tile=8, w_tile=8)
+    probe = _f32(*ops.conv2d(x, w, b, **kw).shape)
+
+    def loss(x, w, b):
+        return jnp.sum(ops.conv2d(x, w, b, **kw) * probe)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(lambda x, w, b: jnp.sum(ref.conv2d_epilogue_ref(
+        x, w, b, stride=1, padding="SAME", relu=True, pool=True) * probe),
+        (0, 1, 2))(x, w, b)
+    for g, wgt in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wgt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_conv_grad_sub2x2_pool_raises_like_primal():
+    """Differentiation must reject a sub-2×2 pooled conv output exactly
+    like the primal call does (the VJP fwd rule runs the kernel with the
+    epilogue disabled, so it re-checks what the kernel would have)."""
+    x, w = _f32(1, 3, 3, 4), _f32(3, 3, 4, 4)
+    with pytest.raises(ValueError, match="2×2 pool"):
+        ops.conv2d(x, w, relu=True, pool=True)
+    with pytest.raises(ValueError, match="2×2 pool"):
+        jax.grad(lambda x: jnp.sum(
+            ops.conv2d(x, w, relu=True, pool=True)))(x)
+
+
+def test_conv_grad_bias_none():
+    x, w = _f32(1, 8, 8, 4), _f32(3, 3, 4, 4)
+    dx = jax.grad(lambda x: jnp.sum(
+        ops.conv2d(x, w, stride=1, padding="SAME", relu=True)))(x)
+    assert dx.shape == x.shape and bool(jnp.all(jnp.isfinite(dx)))
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels vs their ref oracles vs jax.vjp of the forward oracle
+# ---------------------------------------------------------------------------
+
+
+BWD_CASES = [
+    (8, 8, 4, 4, 3, 1, "VALID"),
+    (9, 10, 4, 8, 3, 2, "SAME"),
+    (10, 7, 2, 4, 5, 2, "VALID"),
+    (6, 6, 4, 4, 3, 1, ((2, 1), (0, 2))),
+    (7, 7, 1, 4, 1, 1, "VALID"),
+    # forward padding beyond the kernel extent: the transposed conv's
+    # "full" padding goes negative and must slice, not pad
+    (8, 8, 4, 4, 3, 3, ((4, 4), (4, 4))),
+]
+
+
+@pytest.mark.parametrize("h,w,c,k,kh,stride,padding", BWD_CASES)
+def test_bwd_oracles_and_kernels_match_vjp(h, w, c, k, kh, stride,
+                                           padding):
+    x = _f32(2, h, w, c)
+    wgt = _f32(kh, kh, c, k)
+    y, vjp = jax.vjp(
+        lambda x, w: ref.conv2d_ref(x, w, stride=stride, padding=padding),
+        x, wgt)
+    g = _f32(*y.shape)
+    dx_t, dw_t = vjp(g)
+    dx_o = ref.conv2d_input_grad_ref(g, wgt, x.shape, stride=stride,
+                                     padding=padding)
+    dw_o = ref.conv2d_weight_grad_ref(x, g, kh, kh, stride=stride,
+                                      padding=padding)
+    np.testing.assert_allclose(np.asarray(dx_o), np.asarray(dx_t),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw_o), np.asarray(dw_t),
+                               rtol=1e-5, atol=1e-4)
+    dx_k = conv2d_ws_input_grad(g, wgt, x.shape, stride=stride,
+                                padding=padding, interpret=True)
+    dw_k = conv2d_ws_weight_grad(x, g, kh, kh, stride=stride,
+                                 padding=padding, interpret=True)
+    np.testing.assert_allclose(np.asarray(dx_k), np.asarray(dx_t),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_t),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_input_grad_kernel_tiled_matches_whole_map():
+    x_shape = (1, 16, 14, 4)
+    wgt = _f32(3, 3, 4, 8)
+    g = _f32(1, 8, 7, 8)
+    whole = conv2d_ws_input_grad(g, wgt, x_shape, stride=2,
+                                 padding="SAME", interpret=True)
+    tiled = conv2d_ws_input_grad(g, wgt, x_shape, stride=2, padding="SAME",
+                                 h_tile=5, w_tile=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(whole),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_maxpool_argmax_bwd_oracle():
+    """The argmax-mask pool backward routes each window's cotangent to
+    the forward max — matching jax.grad of the pooling oracle wherever
+    windows have a unique max (ties are measure-zero for random data)."""
+    y = _f32(2, 6, 8, 4)
+    g = _f32(2, 3, 4, 4)
+    idx = ref.maxpool2x2_argmax_ref(y)
+    got = ref.maxpool2x2_bwd_ref(idx, g, y.shape)
+    want = jax.vjp(lambda y: ref.maxpool2d_ref(y), y)[1](g)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_relu_mask_convention():
+    """The epilogue mask passes gradient only where the accumulator was
+    strictly positive; exactly-zero accumulators (measure-zero for real
+    data; jnp.maximum splits the tie as 0.5) get none — the deployed
+    kernel's hard-gate reading of the ReLU subgradient."""
+    acc = jnp.asarray([-1.0, 0.0, 2.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ref.relu_mask_ref(acc)),
+                                  np.asarray([False, False, True]))
+
+
+# ---------------------------------------------------------------------------
+# int8 / requantized paths stay non-differentiable, primal unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_float_requant_path_primal_unchanged():
+    """out_scale on float inputs still runs the fused requantize (int8
+    out) — the custom VJP only wraps the plain float accumulator path."""
+    x, w = _f32(1, 8, 8, 4), _f32(3, 3, 4, 4)
+    out = ops.conv2d(x, w, out_scale=jnp.float32(0.05), relu=True)
+    want = ref.conv2d_epilogue_ref(x, w, relu=True,
+                                   out_scale=jnp.float32(0.05))
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# matmul_ws gradient checks + the bias-grad precision regression
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_grads_fd():
+    x, w, b = _f32(16, 12), _f32(12, 8), _f32(8)
+    probe = _f32(16, 8)
+
+    def loss(x, w, b):
+        return jnp.sum(ops.matmul_ws(x, w, b) * probe)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    _fd_directional(loss, [x, w, b], grads, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_bias_grad_sums_in_f32_regression():
+    """Regression (failing before): ``_matmul_bwd`` summed the RAW
+    cotangent dtype, so an f32 master bias fed bf16 cotangents got a
+    bf16-rounded, bf16-DTYPED gradient.  The sum must run in f32 and only
+    the result cast — to the bias dtype."""
+    x = jnp.asarray(RNG.normal(size=(64, 32)), jnp.bfloat16)
+    w = jnp.asarray(RNG.normal(size=(32, 16)), jnp.bfloat16)
+    b = jnp.asarray(RNG.normal(size=(16,)), jnp.float32)
+    probe = _f32(64, 16)
+
+    db = jax.grad(lambda b: jnp.sum(
+        ops.matmul_ws(x, w, b).astype(jnp.float32) * probe))(b)
+    # the incoming cotangent is bf16 (the kernel output dtype); its exact
+    # f32 sum is NOT bf16-representable for this probe
+    want = jnp.sum(probe.astype(jnp.bfloat16).astype(jnp.float32), axis=0)
+    assert db.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(want))
+    assert not bool(jnp.all(want.astype(jnp.bfloat16).astype(jnp.float32)
+                            == want)), \
+        "probe too benign: the bf16 round-trip should lose precision"
+
+
+def test_conv_bias_grad_dtype_follows_bias():
+    """conv2d's VJP applies the same contract: f32 bias + bf16 network →
+    f32 bias gradient."""
+    x = jnp.asarray(RNG.normal(size=(1, 8, 8, 4)), jnp.bfloat16)
+    w = jnp.asarray(RNG.normal(size=(3, 3, 4, 4)), jnp.bfloat16)
+    b = jnp.asarray(RNG.normal(size=(4,)), jnp.float32)
+    db = jax.grad(lambda b: jnp.sum(
+        ops.conv2d(x, w, b, relu=True).astype(jnp.float32)))(b)
+    assert db.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep (guarded import, like tests/test_property.py)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def grad_case(draw):
+        h = draw(st.integers(6, 11))
+        w = draw(st.integers(6, 11))
+        kh = draw(st.sampled_from([1, 3]))
+        stride = draw(st.sampled_from([1, 2]))
+        padding = draw(st.sampled_from(
+            ["SAME", "VALID", ((1, 0), (0, 1)), ((0, 2), (1, 1))]))
+        relu = draw(st.booleans())
+        pool = draw(st.booleans())
+        oh, ow = ref.conv_out_shape(h, w, kh, kh, stride, padding)
+        if pool and (oh < 2 or ow < 2):
+            pool = False
+        seed = draw(st.integers(0, 2**31 - 1))
+        return h, w, kh, stride, padding, relu, pool, seed
+
+    @given(grad_case())
+    @settings(max_examples=12, deadline=None)
+    def test_conv_grad_hypothesis_sweep(case):
+        """Random stride/padding/epilogue configs: kernel grads track the
+        differentiable oracle's."""
+        h, w, kh, stride, padding, relu, pool, seed = case
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(1, h, w, 4)), jnp.float32)
+        wgt = jnp.asarray(rng.normal(size=(kh, kh, 4, 4)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+        kw = dict(stride=stride, padding=padding, relu=relu, pool=pool)
+        probe = jnp.asarray(
+            rng.normal(size=ops.conv2d(x, wgt, b, **kw).shape), jnp.float32)
+        grads = jax.grad(lambda x, w, b: jnp.sum(
+            ops.conv2d(x, w, b, **kw) * probe), (0, 1, 2))(x, wgt, b)
+        want = jax.grad(lambda x, w, b: jnp.sum(
+            ref.conv2d_epilogue_ref(x, w, b, **kw) * probe),
+            (0, 1, 2))(x, wgt, b)
+        for g, wnt in zip(grads, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(wnt),
+                                       rtol=2e-4, atol=2e-4)

@@ -68,12 +68,13 @@ def test_vjp_rejects_int8_and_promotes_cotangent():
     xi = jnp.asarray(RNG.integers(-128, 128, (4, 5)), jnp.int8)
     wi = jnp.asarray(RNG.integers(-128, 128, (5, 3)), jnp.int8)
     with pytest.raises(TypeError, match="float"):
-        ops._matmul_bwd((xi, wi, False), g)
+        ops._matmul_bwd((xi, wi, None), g)
     xb = _f32(4, 5).astype(jnp.bfloat16)
     wb = _f32(5, 3).astype(jnp.bfloat16)
-    dx, dw, db = ops._matmul_bwd((xb, wb, True), g)
+    # residuals carry the bias itself (its dtype steers the bias-grad cast)
+    dx, dw, db = ops._matmul_bwd((xb, wb, _f32(3)), g)
     assert dx.dtype == jnp.bfloat16 and dw.dtype == jnp.bfloat16
-    assert db.shape == (3,)
+    assert db.shape == (3,) and db.dtype == jnp.float32
 
 
 def test_bf16_inputs():

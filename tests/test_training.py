@@ -1,0 +1,245 @@
+"""The training subsystem: float shadow forward through the WS kernels,
+the jitted AdamW train step over NetworkPlan DAGs, QAT fake quantization,
+the §5.2 train-step cycle model, and the acceptance round trip —
+train float+STE → quantize_network → make_int8_program with int8 accuracy
+within 2% of the float shadow."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import network, perfmodel, training
+from repro.core.convcore import ConvCoreConfig
+from repro.core.quantize import (fake_quant_act, fake_quant_weight,
+                                 fake_quantize, quantize_symmetric)
+
+RNG = np.random.default_rng(5)
+
+
+# ---------------------------------------------------------------------------
+# fake quantization (the STE)
+# ---------------------------------------------------------------------------
+
+
+def test_fake_quantize_forward_is_int8_roundtrip():
+    x = jnp.asarray(RNG.normal(size=(64,)) * 3, jnp.float32)
+    scale = jnp.float32(0.05)
+    got = fake_quantize(x, scale)
+    want = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_fake_quantize_backward_is_identity():
+    x = jnp.asarray(RNG.normal(size=(32,)), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(fake_quantize(x, jnp.float32(0.1)) *
+                                   jnp.arange(32, dtype=jnp.float32)))(x)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.arange(32, dtype=np.float32), rtol=1e-6)
+
+
+def test_fake_quant_weight_matches_deployment_grid():
+    """QAT must see the grid quantize_network will emit: fake-quantized
+    weights are exactly the dequantized int8 lowering (per tensor and per
+    output channel)."""
+    w = jnp.asarray(RNG.normal(size=(3, 3, 4, 8)), jnp.float32)
+    for per_channel in (False, True):
+        got = fake_quant_weight(w, per_channel)
+        wq = quantize_symmetric(
+            w, axis=tuple(range(w.ndim - 1)) if per_channel else None)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(wq.dequantize()),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_act_scale_has_no_gradient():
+    x = jnp.asarray(RNG.normal(size=(16,)), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(fake_quant_act(x)))(x)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    np.testing.assert_allclose(np.asarray(g), np.ones(16, np.float32),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# float shadow forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_plan", [
+    lambda: network.lenet(input_shape=(12, 12, 1)),
+    lambda: network.resnet_small(input_shape=(16, 16, 4)),
+])
+def test_float_forward_matches_ref_oracle(make_plan):
+    """The kernel-substrate shadow forward equals the lax-based float
+    oracle (straight-line and residual-DAG plans alike)."""
+    plan = make_plan()
+    params = plan.init_params(np.random.default_rng(0))
+    x = jnp.asarray(RNG.normal(size=(2, *plan.input_shape)), jnp.float32)
+    got = training.float_forward(plan, params, x)
+    want = plan.apply_ref(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_float_forward_qat_still_close_to_float():
+    """Fake quantization perturbs activations by at most ~1 LSB per grid
+    point — the QAT forward stays close to (but not equal to) the float
+    one."""
+    plan = network.lenet(input_shape=(12, 12, 1))
+    params = plan.init_params(np.random.default_rng(0))
+    x = jnp.asarray(RNG.normal(size=(4, *plan.input_shape)), jnp.float32)
+    f = training.float_forward(plan, params, x)
+    q = training.float_forward(plan, params, x, qat=True)
+    assert not bool(jnp.all(f == q))
+    rel = float(jnp.linalg.norm(f - q) / jnp.linalg.norm(f))
+    assert rel < 0.2, rel
+
+
+# ---------------------------------------------------------------------------
+# train step / fit
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_runs_and_learns_lenet():
+    plan = network.lenet(input_shape=(12, 12, 1))
+    rng = np.random.default_rng(1)
+    x, y = training.synthetic_digits(rng, 256)
+    state, hist = training.fit(plan, x, y, steps=25, batch=32, seed=2)
+    assert int(state.step) == 25
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.5, (
+        hist[0]["loss"], hist[-1]["loss"])
+    assert all(np.isfinite(h["grad_norm"]) for h in hist)
+
+
+def test_train_step_residual_dag():
+    """One step through a residual graph: gradients flow through skip
+    adds, projection shortcuts, and global pool, and stay finite."""
+    plan = network.resnet_small(input_shape=(16, 16, 4), classes=4)
+    rng = np.random.default_rng(3)
+    x, y = training.synthetic_digits(rng, 32, input_shape=(16, 16, 4),
+                                     classes=4)
+    state = training.init_train_state(plan, rng)
+    step = training.make_train_step(plan)
+    state2, metrics = step(state, x[:8], y[:8])
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # every parametric node actually moved
+    for p0, p1 in zip(state.params, state2.params):
+        if p0 is not None:
+            assert not bool(jnp.all(p0["w"] == p1["w"]))
+
+
+def test_train_step_concat_merge():
+    """Branch-concat graphs train too: gradients split across the
+    concatenated branches."""
+    plan = network.NetworkPlan(
+        name="concat_net", input_shape=(8, 8, 4),
+        layers=(
+            network.conv(4, relu=True, name="a", input="input"),
+            network.conv(4, relu=True, name="b", input="input"),
+            network.concat("a", "b", name="m"),
+            network.global_pool(),
+            network.dense(4),
+        ))
+    rng = np.random.default_rng(4)
+    x, y = training.synthetic_digits(rng, 16, input_shape=(8, 8, 4),
+                                     classes=4)
+    state = training.init_train_state(plan, rng)
+    step = training.make_train_step(plan, training.TrainConfig(qat=True))
+    state2, metrics = step(state, x, y)
+    assert np.isfinite(float(metrics["loss"]))
+    for i in (0, 1):                      # both branches got gradient
+        assert not bool(jnp.all(state.params[i]["w"]
+                                == state2.params[i]["w"]))
+
+
+def test_synthetic_digits_share_templates_across_calls():
+    rng = np.random.default_rng(0)
+    x1, y1 = training.synthetic_digits(rng, 64)
+    x2, y2 = training.synthetic_digits(rng, 64)
+    # same task (templates), different samples
+    assert not bool(jnp.all(x1 == x2))
+    m1 = jnp.stack([jnp.mean(x1[y1 == c], 0) for c in range(10)])
+    m2 = jnp.stack([jnp.mean(x2[y2 == c], 0) for c in range(10)])
+    assert float(jnp.mean(jnp.abs(m1 - m2))) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# the acceptance round trip: QAT → quantize_network → int8 program
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_lenet_qat_roundtrip_within_2pct(per_channel):
+    """Train the LeNet float shadow with straight-through fake quant,
+    lower the trained weights with quantize_network, compile with
+    make_int8_program — deployed int8 accuracy must hold within 2% of
+    the float shadow on the held-out synthetic eval set."""
+    plan = network.lenet(input_shape=(12, 12, 1))
+    rng = np.random.default_rng(7)
+    x, y = training.synthetic_digits(rng, 384)
+    xe, ye = training.synthetic_digits(rng, 192)
+    cfg = training.TrainConfig(qat=True, per_channel=per_channel)
+    state, _ = training.fit(plan, x, y, steps=50, batch=32, cfg=cfg,
+                            seed=8)
+
+    float_logits = training.float_forward(plan, state.params, xe)
+    float_acc = float(training.accuracy(float_logits, ye))
+    assert float_acc >= 0.9, f"shadow model failed to learn: {float_acc}"
+
+    qnet = network.quantize_network(plan, state.params, x[:128],
+                                    per_channel=per_channel)
+    program = network.make_int8_program(
+        qnet, ConvCoreConfig(backend="pallas", int8=True))
+    int8_acc = float(training.accuracy(program(xe), ye))
+    assert abs(float_acc - int8_acc) <= 0.02, (float_acc, int8_acc)
+
+
+# ---------------------------------------------------------------------------
+# the §5.2 train-step cycle model
+# ---------------------------------------------------------------------------
+
+
+def test_train_report_backward_accounting():
+    plan = network.lenet()
+    fwd = plan.perf_report()
+    rep = plan.train_report()
+    # backward = input-grad + weight-grad ≈ 2× forward psums; step = 3×
+    assert rep["forward"]["psums"] == fwd["psums"]
+    assert rep["backward"]["psums"] == 2 * fwd["psums"]
+    assert rep["psums"] == 3 * fwd["psums"]
+    assert rep["cycles"] >= fwd["cycles"] * 3 - len(plan.layers) * \
+        perfmodel.IPCoreConfig().cycles_per_batch
+    # parametric nodes carry dW writeback traffic on the DMA interface
+    dw_rows = [r for r in rep["backward"]["layers"] if "dw_bytes" in r]
+    shapes = [s for s in plan.param_shapes() if s is not None]
+    assert len(dw_rows) == len(shapes)
+    for row, shp in zip(dw_rows, shapes):
+        want = 4 * (int(np.prod(shp["w"])) + int(np.prod(shp["b"])))
+        assert row["dw_bytes"] == want
+        assert row["cycles"] >= row["dw_dma_cycles"] or \
+            row["cycles"] >= perfmodel.cycles(row["psums_bwd"])
+    # full board: replication helps compute, not the shared DMA interface
+    assert rep["full_board"]["cycles"] <= rep["cycles"]
+
+
+def test_train_report_paper_defaults_untouched():
+    """Adding the training model must not move the §5.2 inference
+    anchors."""
+    nums = perfmodel.paper_reference_numbers()
+    assert round(nums["gops_1core"], 3) == 0.224
+    assert round(nums["gops_20cores"], 2) == 4.48
+
+
+def test_dense_only_train_report():
+    """train_report works for plans whose backward is DMA-bound (fat dense
+    layers: dW traffic dominates the 2× psum compute)."""
+    plan = network.NetworkPlan(
+        name="dense_heavy", input_shape=(4, 4, 4),
+        layers=(network.flatten(), network.dense(512, relu=True),
+                network.dense(4)))
+    rep = plan.train_report()
+    rows = {r["name"]: r for r in rep["backward"]["layers"]}
+    fat = rows["dense1"]
+    assert fat["cycles"] == max(perfmodel.cycles(fat["psums_bwd"]),
+                                fat["dw_dma_cycles"])
