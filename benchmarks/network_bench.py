@@ -1,11 +1,16 @@
-"""Whole-network benchmark: LeNet / VGG-small / ResNet-small / large-map
-int8 NetworkPlans through the Pallas backend (interpret on CPU —
+"""Whole-network benchmark: LeNet / VGG-small / ResNet-small / MobileNet /
+large-map int8 NetworkPlans through the Pallas backend (interpret on CPU —
 functional timing reference), with the §5.2 cycle model's whole-network
 prediction alongside the measurement.
 
 The resnet row exercises the residual-graph (DAG) compiler: skip
 connections with shared-grid int8 merge adds and 1×1 projection
-shortcuts, the ResNet/MobileNet workload class.
+shortcuts.  The mobilenet rows exercise the grouped-conv contract
+(depthwise-separable and inverted-residual blocks); their model rows
+carry the grouped perfmodel pricing — ``grouped_layers`` and
+``dma_bound_board_layers`` record how many layers the shared DMA
+interface binds on the full board (depthwise layers compute a factor-C
+fewer psums over the same maps, so DMA, not compute, is their floor).
 
 The large-map network's first layer exceeds the whole-map VMEM budget —
 it only runs because the spatially-tiled conv pipeline streams it through
@@ -70,13 +75,19 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
     tiled_layers = sum(1 for tp in tile_plans if tp is not None and tp.tiled)
     halo_max = max((tp.halo_read_factor for tp in tile_plans
                     if tp is not None), default=1.0)
+    # grouped-conv rows: how many layers are grouped/depthwise, and how
+    # many priced layers the shared DMA interface binds on the full board
+    # (the depthwise arithmetic-intensity signal the model must show)
+    grouped_layers = plan.grouped_layer_count()
+    dma_bound = rep["dma_bound_board_layers"]
     images_s = batch / (us * 1e-6)
     layers_s = batch * n_layers / (us * 1e-6)
     emit(f"network/{plan.name}", us,
          f"images_s={images_s:.1f};layers_s={layers_s:.1f};"
          f"model_ms={rep['seconds']*1e3:.3f};"
          f"model_ms_20core={fb['seconds']*1e3:.3f};"
-         f"tiled_layers={tiled_layers};halo_factor={halo_max:.3f}")
+         f"tiled_layers={tiled_layers};halo_factor={halo_max:.3f};"
+         f"grouped_layers={grouped_layers};dma_bound_board={dma_bound}")
     return {
         "name": plan.name,
         "batch": batch,
@@ -91,6 +102,8 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
         "model_gops_20core": fb["gops_paper"],
         "tiled_layers": tiled_layers,
         "max_halo_read_factor": halo_max,
+        "grouped_layers": grouped_layers,
+        "dma_bound_board_layers": dma_bound,
     }
 
 
@@ -138,11 +151,14 @@ def _bench_train(plan: network.NetworkPlan, rng, batch: int = BATCH,
 def run(smoke: bool = False, train: bool = False):
     rng = np.random.default_rng(3)
     if smoke:
-        # CI fast path: LeNet + the residual-graph compiler (resnet) with
-        # minimal iterations; do NOT touch the tracked BENCH_network.json
-        # — that file records the cross-PR trajectory of the full run
+        # CI fast path: LeNet + the residual-graph compiler (resnet) +
+        # the grouped-conv compiler (mobilenet) with minimal iterations;
+        # do NOT touch the tracked BENCH_network.json — that file records
+        # the cross-PR trajectory of the full run
         _bench_plan(network.lenet(), rng, batch=2, iters=1, warmup=1)
         _bench_plan(network.resnet_small(), rng, batch=2, iters=1,
+                    warmup=1)
+        _bench_plan(network.mobilenet_small(), rng, batch=2, iters=1,
                     warmup=1)
         if train:
             _bench_train(network.lenet(input_shape=(12, 12, 1)), rng,
@@ -152,6 +168,10 @@ def run(smoke: bool = False, train: bool = False):
                _bench_plan(network.vgg_small(), rng),
                # residual graphs: skip adds + projection shortcuts
                _bench_plan(network.resnet_small(), rng),
+               # grouped/depthwise convs: the MobileNet edge family, with
+               # grouped perfmodel rows (DMA-bound depthwise layers)
+               _bench_plan(network.mobilenet_small(), rng),
+               _bench_plan(network.mobilenet_v2ish(), rng),
                # the tiled-pipeline workload: exceeds whole-map VMEM
                _bench_plan(network.large_map(), rng, batch=2,
                            iters=1, warmup=0)]
@@ -164,6 +184,10 @@ def run(smoke: bool = False, train: bool = False):
     payload["train"] = [
         _bench_train(network.lenet(input_shape=(12, 12, 1)), rng),
         _bench_train(network.resnet_small(input_shape=(16, 16, 4)),
+                     rng, batch=2, iters=2),
+        # the grouped backward pass: depthwise transposed convs +
+        # per-group weight-grad GEMMs through the QAT step
+        _bench_train(network.mobilenet_small(input_shape=(12, 12, 1)),
                      rng, batch=2, iters=2),
     ]
     with open(OUT_PATH, "w") as f:

@@ -41,7 +41,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.kernels.ref import conv_out_shape, halo_window, normalize_padding
+from repro.kernels.ref import (check_groups, conv_out_shape, grouped_banks,
+                               halo_window, normalize_padding)
+from repro.kernels.ref import divisor_banks as _ref_divisor_banks
 
 VMEM_BYTES = 16 * 1024 * 1024        # realistic per-core VMEM (~16 MiB)
 VMEM_BYTES_V5E = 128 * 1024 * 1024   # legacy generous budget (BankPlan)
@@ -140,6 +142,9 @@ class TilePlan:
     pool: bool = False
     in_bytes: int = 1
     budget: int = VMEM_BYTES
+    groups: int = 1                   # grouped conv: kout banks stay inside
+                                      # group boundaries; image blocks are
+                                      # the per-group C/groups slice
 
     @property
     def working_set_bytes(self) -> int:
@@ -179,7 +184,7 @@ def _align_tile(v: int, pool: bool) -> int:
 
 def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
                stride: int = 1, padding="VALID", pool: bool = False,
-               in_bytes: int = 1, acc_bytes: int = 4,
+               groups: int = 1, in_bytes: int = 1, acc_bytes: int = 4,
                out_bytes: Optional[int] = None,
                cin_banks: int = 4, kout_banks: int = 4,
                vmem_budget: Optional[int] = VMEM_BYTES) -> TilePlan:
@@ -193,10 +198,23 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
     ``vmem_budget=None`` no fitting is attempted (whole-map single tile —
     the seed dataflow).
 
+    ``groups`` plans the grouped/depthwise working set: image and weight
+    blocks carry the per-group C/groups channel slice (a kout bank only
+    ever DMAs its own group's channels), cin-bank doubling is bounded by
+    that slice, and kout-bank doubling stays on group boundaries.
+    Depthwise layers therefore bottom out at one-channel blocks whose
+    working set is pure DMA — the planner's view of why their arithmetic
+    intensity sits on the DMA roofline (perfmodel prices it).
+
     ``out_bytes`` is the epilogue output element size (1 when the fused
     requantize writes int8; defaults to ``acc_bytes``)."""
-    assert c % cin_banks == 0 and k % kout_banks == 0, (
-        "banking invariant: C and K divisible by the bank counts")
+    check_groups(c, k, groups)
+    cgrp = c // groups
+    assert cgrp % cin_banks == 0 and k % kout_banks == 0 \
+        and kout_banks % groups == 0, (
+        "banking invariant: C/groups and K divisible by the bank counts, "
+        "kout banks on group boundaries", c, k, groups, cin_banks,
+        kout_banks)
     out_bytes = acc_bytes if out_bytes is None else out_bytes
     oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
     if pool:
@@ -210,7 +228,7 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
 
     def build(th: int, tw: int, cbn: int, kbn: int) -> TilePlan:
-        cb, kb = c // cbn, k // kbn
+        cb, kb = cgrp // cbn, k // kbn
         in_th = halo_window(th, stride, kh)
         in_tw = halo_window(tw, stride, kw)
         pth, ptw = (th // 2, tw // 2) if pool else (th, tw)
@@ -223,7 +241,7 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
             acc_block_bytes=th * tw * kb * acc_bytes,
             output_block_bytes=pth * ptw * kb * out_bytes,
             stride=stride, out_h=oh, out_w=ow, pool=pool,
-            in_bytes=in_bytes, budget=budget)
+            in_bytes=in_bytes, budget=budget, groups=groups)
 
     state = (oh, ow, cin_banks, kout_banks)
     plan = build(*state)
@@ -237,8 +255,10 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
             moves.append((_align_tile(-(-th // 2), pool), tw, cbn, kbn))
         if _align_tile(-(-tw // 2), pool) < tw and tw > min_tile:
             moves.append((th, _align_tile(-(-tw // 2), pool), cbn, kbn))
-        if c // cbn > 1 and c % (cbn * 2) == 0:
+        if cgrp // cbn > 1 and cgrp % (cbn * 2) == 0:
             moves.append((th, tw, cbn * 2, kbn))
+        # kout doubling keeps banks on group boundaries automatically
+        # (2·(m·groups) is still a multiple of groups)
         if k // kbn > 1 and k % (kbn * 2) == 0:
             moves.append((th, tw, cbn, kbn * 2))
         candidates = [(build(*m), m) for m in moves]
@@ -254,8 +274,7 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
 def divisor_banks(dim: int, want: int) -> int:
     """Largest bank count ≤ ``want`` that divides ``dim`` — how the paper's
     divisible-by-4 invariant degrades for awkward channel counts (e.g. the
-    C=1 input layer of a grayscale network runs on a single image BMG)."""
-    b = max(1, min(want, dim))
-    while dim % b:
-        b -= 1
-    return b
+    C=1 input layer of a grayscale network runs on a single image BMG).
+    Delegates to the shared definition in kernels/ref.py; ``grouped_banks``
+    (re-exported here) is its grouped-conv generalization."""
+    return _ref_divisor_banks(dim, want)

@@ -49,8 +49,8 @@ class Backend(Protocol):
 
     def conv(self, x: jax.Array, w: jax.Array,
              bias: Optional[jax.Array] = None, *, stride: int = 1,
-             padding="VALID", relu: bool = False, pool: bool = False,
-             out_scale=None, wrap8: bool = False,
+             padding="VALID", groups: int = 1, relu: bool = False,
+             pool: bool = False, out_scale=None, wrap8: bool = False,
              plan: Optional[banking.TilePlan] = None) -> jax.Array:
         ...
 
@@ -66,7 +66,7 @@ class RefBackend:
     name = "ref"
 
     def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
-             relu=False, pool=False, out_scale=None, wrap8=False,
+             groups=1, relu=False, pool=False, out_scale=None, wrap8=False,
              plan=None):
         if wrap8:
             # epilogue runs on the int32 accumulator, THEN the result wraps
@@ -80,11 +80,12 @@ class RefBackend:
             assert x.dtype == jnp.int8
             acc = ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
                                           padding=padding, relu=relu,
-                                          pool=pool)
+                                          pool=pool, groups=groups)
             return acc.astype(jnp.int8)
         return ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
                                        padding=padding, relu=relu,
-                                       pool=pool, out_scale=out_scale)
+                                       pool=pool, out_scale=out_scale,
+                                       groups=groups)
 
     def matmul(self, x, w, bias=None):
         if x.dtype == jnp.int8:
@@ -98,18 +99,24 @@ class PallasBackend:
     name = "pallas"
 
     def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
-             relu=False, pool=False, out_scale=None, wrap8=False,
+             groups=1, relu=False, pool=False, out_scale=None, wrap8=False,
              plan=None):
-        cin_banks = plan.cin_banks if plan else 4
-        kout_banks = plan.kout_banks if plan else 4
+        if plan is not None:
+            cin_banks, kout_banks = plan.cin_banks, plan.kout_banks
+        else:
+            # no plan → whole map under the paper's 4×4 banking, degraded
+            # to the largest legal divisors (narrow kernel-set shards and
+            # grouped layers would otherwise trip the divisibility assert)
+            cin_banks, kout_banks = ref.grouped_banks(
+                x.shape[-1], w.shape[-1], groups)
         # tile extents are conv-output pixels; the kernel clamps them to
         # the actual map (shard slices may be smaller than the plan's map)
         h_tile = plan.h_tile if plan else 0
         w_tile = plan.w_tile if plan else 0
         return ops.conv2d(x, w, bias, stride=stride, padding=padding,
-                          cin_banks=cin_banks, kout_banks=kout_banks,
-                          h_tile=h_tile, w_tile=w_tile,
-                          relu=relu, pool=pool, wrap8=wrap8,
+                          groups=groups, cin_banks=cin_banks,
+                          kout_banks=kout_banks, h_tile=h_tile,
+                          w_tile=w_tile, relu=relu, pool=pool, wrap8=wrap8,
                           out_scale=out_scale)
 
     def matmul(self, x, w, bias=None):
@@ -156,43 +163,47 @@ class ConvCore:
         self.config = config
 
     def plan(self, x_shape, w_shape, stride: int = 1, padding="VALID",
-             *, pool: bool = False,
+             *, pool: bool = False, groups: int = 1,
              out_bytes: Optional[int] = None) -> banking.TilePlan:
         """Joint spatial-tile × channel-bank plan for one layer.  With
         ``auto_bank`` the planner shrinks tiles / grows banks until the
         working set fits ``vmem_budget``; otherwise the whole map runs as
-        one tile under the configured banking (the seed dataflow)."""
+        one tile under the configured banking (the seed dataflow).
+        ``groups`` plans the grouped/depthwise working set (per-group
+        channel slices, kout banks on group boundaries)."""
         n, h, w_, c = x_shape
         kh, kw, _, k = w_shape
         cfg = self.config
         in_bytes = 1 if cfg.int8 else 4
-        # degrade bank counts to the largest divisor (C=1 input layers etc.)
-        cb_n = banking.divisor_banks(c, cfg.cin_banks)
-        kb_n = banking.divisor_banks(k, cfg.kout_banks)
+        # degrade bank counts to the largest legal divisors (C=1 input
+        # layers, per-group slices, group-aligned kout banks)
+        cb_n, kb_n = banking.grouped_banks(
+            c, k, groups, want_cin=cfg.cin_banks, want_kout=cfg.kout_banks)
         return banking.plan_tiles(
             h, w_, c, k, kh, kw, stride=stride, padding=padding, pool=pool,
-            in_bytes=in_bytes, acc_bytes=4, out_bytes=out_bytes,
-            cin_banks=cb_n, kout_banks=kb_n,
+            groups=groups, in_bytes=in_bytes, acc_bytes=4,
+            out_bytes=out_bytes, cin_banks=cb_n, kout_banks=kb_n,
             vmem_budget=cfg.vmem_budget if cfg.auto_bank else None)
 
     def apply_layer(self, x: jax.Array, w: jax.Array,
                     bias: Optional[jax.Array] = None,
                     out_scale: Optional[jax.Array] = None, *,
-                    stride: int = 1, padding="VALID", relu: bool = False,
-                    pool: bool = False) -> jax.Array:
-        """x: [N,H,W,C] ⊛ w: [KH,KW,C,K] (+bias [K]) → [N,OH,OW,K].
+                    stride: int = 1, padding="VALID", groups: int = 1,
+                    relu: bool = False, pool: bool = False) -> jax.Array:
+        """x: [N,H,W,C] ⊛ w: [KH,KW,C/groups,K] (+bias [K]) → [N,OH,OW,K].
 
         Fused epilogue order: ReLU → 2×2 max-pool → requantize(out_scale).
         """
         cfg = self.config
         plan = self.plan(x.shape, w.shape, stride, padding, pool=pool,
+                         groups=groups,
                          out_bytes=1 if out_scale is not None else None)
         if cfg.int8:
             assert x.dtype == jnp.int8 and w.dtype == jnp.int8
         backend = get_backend(cfg.backend)
         return backend.conv(x, w, bias, stride=stride, padding=padding,
-                            relu=relu, pool=pool, out_scale=out_scale,
-                            wrap8=cfg.wrap8, plan=plan)
+                            groups=groups, relu=relu, pool=pool,
+                            out_scale=out_scale, wrap8=cfg.wrap8, plan=plan)
 
     def apply_quantized_layer(self, x_f32: jax.Array, w_f32: jax.Array,
                               bias_f32: Optional[jax.Array] = None, *,

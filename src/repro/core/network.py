@@ -76,6 +76,7 @@ from repro.kernels import ref
 # ---------------------------------------------------------------------------
 
 INPUT = "input"          # reserved node name: the network input
+DEPTHWISE = -1           # LayerSpec.groups sentinel: groups = cin
 
 
 @dataclass(frozen=True)
@@ -88,6 +89,12 @@ class LayerSpec:
     standalone "pool" / "avgpool" layers are the unfused fallbacks, and
     "globalpool" is the global average pool ([N,H,W,C] → [N,C]) that lets
     classifier heads skip the flatten + giant-dense pattern.
+
+    ``groups`` (conv only) selects grouped channel contraction: 1 = dense,
+    ``DEPTHWISE`` (−1) resolves to the node's input channel count at walk
+    time — the MobileNet depthwise case, where ``features`` may stay 0 to
+    default to "same width as the input".  ``conv_geometry`` is the single
+    resolver every shape/cost/compile walk shares.
 
     ``name`` labels the node so later layers can reference it (default
     ``f"{kind}{index}"``); ``inputs`` names the producer node(s) — empty
@@ -103,8 +110,29 @@ class LayerSpec:
     relu: bool = False
     pool: bool = False                     # conv only: fused 2×2 max-pool
     size: int = 2                          # "pool"/"avgpool": window/stride
+    groups: int = 1                        # conv only: 1=dense, −1=depthwise
     name: Optional[str] = None             # node label for skip references
     inputs: Tuple[str, ...] = ()           # () → previous layer
+
+
+def conv_geometry(sp: LayerSpec, cin: int,
+                  name: str = "?") -> Tuple[int, int]:
+    """Resolve a conv node's (features, groups) given its input channel
+    count — the ONE place the DEPTHWISE sentinel and the grouped
+    divisibility contract are interpreted, shared by every walk (shapes,
+    params, psums, tile plans, the float oracle, the int8 compiler, the
+    trainer) so they can never disagree."""
+    groups = cin if sp.groups == DEPTHWISE else sp.groups
+    features = sp.features if sp.features else (
+        cin if sp.groups == DEPTHWISE else 0)
+    if features <= 0:
+        raise ValueError(f"node {name!r}: conv needs features > 0")
+    if groups < 1 or cin % groups or features % groups:
+        raise ValueError(
+            f"node {name!r}: groups={groups} must divide both the input "
+            f"channels C={cin} and the kernels K={features} "
+            f"(groups == C is depthwise)")
+    return features, groups
 
 
 def _single(input: Optional[str]) -> Tuple[str, ...]:
@@ -113,11 +141,26 @@ def _single(input: Optional[str]) -> Tuple[str, ...]:
 
 def conv(features: int, kernel: int = 3, stride: int = 1,
          padding: ref.Padding = "SAME", relu: bool = True,
-         pool: bool = False, name: Optional[str] = None,
+         pool: bool = False, groups: int = 1, name: Optional[str] = None,
          input: Optional[str] = None) -> LayerSpec:
     return LayerSpec("conv", features=features, kernel=(kernel, kernel),
                      stride=stride, padding=padding, relu=relu, pool=pool,
-                     name=name, inputs=_single(input))
+                     groups=groups, name=name, inputs=_single(input))
+
+
+def depthwise(kernel: int = 3, stride: int = 1,
+              padding: ref.Padding = "SAME", relu: bool = True,
+              pool: bool = False, features: int = 0,
+              name: Optional[str] = None,
+              input: Optional[str] = None) -> LayerSpec:
+    """Depthwise conv node (groups == input channels): each channel is
+    filtered by its own spatial kernel — the MobileNet workload family's
+    per-channel half of a depthwise-separable block.  ``features``
+    defaults to the input width (multiplier 1); a multiple of it selects
+    a channel multiplier."""
+    return LayerSpec("conv", features=features, kernel=(kernel, kernel),
+                     stride=stride, padding=padding, relu=relu, pool=pool,
+                     groups=DEPTHWISE, name=name, inputs=_single(input))
 
 
 def maxpool(size: int = 2, name: Optional[str] = None,
@@ -255,6 +298,7 @@ class NetworkPlan:
                 if len(s0) != 3:
                     raise ValueError(f"node {names[i]!r}: conv after flatten")
                 kh, kw = sp.kernel
+                k_, _ = conv_geometry(sp, s0[2], names[i])
                 h, w = ref.conv_out_shape(s0[0], s0[1], kh, kw, sp.stride,
                                           sp.padding)
                 if sp.pool:
@@ -265,7 +309,7 @@ class NetworkPlan:
                             f"node {names[i]!r}: 2×2 pool needs a ≥2×2 "
                             f"conv output, got {h}×{w}")
                     h, w = h // 2, w // 2
-                shapes.append((h, w, sp.features))
+                shapes.append((h, w, k_))
             elif sp.kind in ("pool", "avgpool", "globalpool", "flatten"):
                 if len(s0) != 3:
                     raise ValueError(f"node {names[i]!r}: {sp.kind} needs "
@@ -303,7 +347,8 @@ class NetworkPlan:
 
     def param_shapes(self) -> List[Optional[dict]]:
         """Per-node {"w": ..., "b": ...} shapes (None for parameter-free
-        nodes)."""
+        nodes).  Grouped convs carry the per-group channel slice
+        ([KH,KW,C/groups,K] — depthwise weights are [KH,KW,1,C])."""
         ins = self.resolved_inputs()
         acts = self.activation_shapes()
         shapes: List[Optional[dict]] = []
@@ -311,8 +356,9 @@ class NetworkPlan:
             s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
             if sp.kind == "conv":
                 kh, kw = sp.kernel
-                shapes.append({"w": (kh, kw, s0[2], sp.features),
-                               "b": (sp.features,)})
+                k_, g_ = conv_geometry(sp, s0[2])
+                shapes.append({"w": (kh, kw, s0[2] // g_, k_),
+                               "b": (k_,)})
             elif sp.kind == "dense":
                 shapes.append({"w": (s0[0], sp.features),
                                "b": (sp.features,)})
@@ -351,9 +397,10 @@ class NetworkPlan:
             s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
             if sp.kind == "conv":
                 kh, kw = sp.kernel
+                k_, g_ = conv_geometry(sp, s0[2], names[i])
                 rows.append((names[i], perfmodel.psum_count(
-                    s0[0], s0[1], s0[2], sp.features, kh, kw, sp.stride,
-                    sp.padding)))
+                    s0[0], s0[1], s0[2], k_, kh, kw, sp.stride,
+                    sp.padding, groups=g_)))
             elif sp.kind == "dense":
                 rows.append((names[i], s0[0] * sp.features))
             else:
@@ -381,14 +428,42 @@ class NetworkPlan:
                 continue
             h, w, c = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
             kh, kw = sp.kernel
+            k_, g_ = conv_geometry(sp, c)
+            cb_n, kb_n = banking.grouped_banks(
+                c, k_, g_, want_cin=cin_banks, want_kout=kout_banks)
             plans.append(banking.plan_tiles(
-                h, w, c, sp.features, kh, kw, stride=sp.stride,
-                padding=sp.padding, pool=sp.pool, in_bytes=in_bytes,
+                h, w, c, k_, kh, kw, stride=sp.stride,
+                padding=sp.padding, pool=sp.pool, groups=g_,
+                in_bytes=in_bytes,
                 out_bytes=4 if i == last_param else in_bytes,
-                cin_banks=banking.divisor_banks(c, cin_banks),
-                kout_banks=banking.divisor_banks(sp.features, kout_banks),
+                cin_banks=cb_n, kout_banks=kb_n,
                 vmem_budget=vmem_budget))
         return plans
+
+    def conv_geometries(self) -> List[Optional[Tuple[int, int]]]:
+        """Per-node resolved (features, groups) for conv nodes (None for
+        everything else) — the DEPTHWISE sentinel resolved against each
+        node's actual input width, for consumers that need the group
+        structure without re-deriving shapes (the int8 compiler, the
+        trainer's float shadow)."""
+        names = self.node_names()
+        ins = self.resolved_inputs()
+        acts = self.activation_shapes()
+        out: List[Optional[Tuple[int, int]]] = []
+        for i, sp in enumerate(self.layers):
+            if sp.kind != "conv":
+                out.append(None)
+                continue
+            s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
+            out.append(conv_geometry(sp, s0[2], names[i]))
+        return out
+
+    def grouped_layer_count(self) -> int:
+        """Number of conv nodes with grouped (groups > 1) contraction —
+        the benchmark/report shorthand for "how much of this plan is the
+        depthwise workload class"."""
+        return sum(1 for g in self.conv_geometries()
+                   if g is not None and g[1] > 1)
 
     def perf_report(self, cfg: perfmodel.IPCoreConfig =
                     perfmodel.IPCoreConfig(),
@@ -443,9 +518,10 @@ class NetworkPlan:
             src = [x if j < 0 else acts[j] for j in ins[i]]
             h = src[0]
             if sp.kind == "conv":
+                _, g_ = conv_geometry(sp, h.shape[-1])
                 h = ref.conv2d_epilogue_ref(
                     h, p["w"], p["b"], stride=sp.stride, padding=sp.padding,
-                    relu=sp.relu, pool=sp.pool)
+                    relu=sp.relu, pool=sp.pool, groups=g_)
             elif sp.kind == "pool":
                 h = ref.maxpool2d_ref(h, sp.size)
             elif sp.kind == "avgpool":
@@ -636,6 +712,7 @@ def make_int8_program(qnet: QuantizedNetwork,
     backend = get_backend(core_config.backend)
     plan = qnet.plan
     ins = plan.resolved_inputs()
+    geoms = plan.conv_geometries()     # resolved (features, groups)
     merges = qnet.merge_scales or (None,) * len(plan.layers)
     if tile_plans is None:
         tile_plans = program_tile_plans(plan, core_config)
@@ -659,8 +736,9 @@ def make_int8_program(qnet: QuantizedNetwork,
             h = src[0]
             if sp.kind == "conv":
                 h = backend.conv(h, w, b, stride=sp.stride,
-                                 padding=sp.padding, relu=sp.relu,
-                                 pool=sp.pool, out_scale=rq, plan=tp)
+                                 padding=sp.padding, groups=geoms[i][1],
+                                 relu=sp.relu, pool=sp.pool, out_scale=rq,
+                                 plan=tp)
                 if rq is None:                       # final conv: dequantize
                     h = h.astype(jnp.float32) * qnet.out_dequant
             elif sp.kind == "pool":
@@ -807,6 +885,65 @@ def resnet_small(input_shape: Tuple[int, int, int] = (32, 32, 4),
     layers += _basic_block(3, "b2", 64, 2)                      # 8×8
     layers += [global_pool(), dense(classes)]
     return NetworkPlan(name="resnet_small", input_shape=input_shape,
+                       layers=tuple(layers))
+
+
+def _ds_block(i: int, k: int, stride: int = 1) -> List[LayerSpec]:
+    """A MobileNet-v1 depthwise-separable block: 3×3 depthwise (spatial
+    filtering, one kernel per channel) followed by a 1×1 pointwise conv
+    (the channel mix) — the factorization that trades the dense conv's
+    C·K channel contraction for C + C·K."""
+    return [
+        depthwise(stride=stride, relu=True, name=f"d{i}"),
+        conv(k, kernel=1, relu=True, name=f"p{i}"),
+    ]
+
+
+def mobilenet_small(input_shape: Tuple[int, int, int] = (16, 16, 4),
+                    classes: int = 10) -> NetworkPlan:
+    """MobileNet-v1-style depthwise-separable classifier: a dense stem,
+    then depthwise + pointwise pairs with stride-2 downsampling, global
+    average pool, dense head — the edge-CNN workload family the grouped
+    conv contract opens up.  Depthwise layers run the degenerate
+    one-cin-bank sweep (one kernel set per channel group), so their
+    perfmodel rows sit on the shared-DMA floor, not on compute."""
+    layers: List[LayerSpec] = [conv(8, relu=True, name="stem")]
+    layers += _ds_block(1, 16)
+    layers += _ds_block(2, 32, stride=2)                        # 8×8
+    layers += _ds_block(3, 32)
+    layers += [global_pool(), dense(classes)]
+    return NetworkPlan(name="mobilenet_small", input_shape=input_shape,
+                       layers=tuple(layers))
+
+
+def _inverted_residual(i: int, src: str, cin: int, out: int, stride: int,
+                       expand: int = 2) -> List[LayerSpec]:
+    """A MobileNet-v2 inverted-residual block: 1×1 expand (×``expand``) →
+    3×3 depthwise → linear 1×1 project, with an identity skip add (the
+    PR-3 DAG merge) when the block keeps shape.  The projection conv is
+    deliberately relu=False — v2's linear bottleneck."""
+    blk = [
+        conv(cin * expand, kernel=1, relu=True, name=f"m{i}e", input=src),
+        depthwise(stride=stride, relu=True, name=f"m{i}d"),
+        conv(out, kernel=1, relu=False, name=f"m{i}p"),
+    ]
+    if stride == 1 and cin == out:
+        blk.append(add(src, f"m{i}p", name=f"m{i}"))
+    return blk
+
+
+def mobilenet_v2ish(input_shape: Tuple[int, int, int] = (16, 16, 4),
+                    classes: int = 10) -> NetworkPlan:
+    """MobileNet-v2-style inverted-residual classifier: expand → depthwise
+    → linear-project blocks whose identity skips reuse the residual-graph
+    int8 merge (shared-grid saturating add), stacking grouped convs onto
+    the DAG story — the second half of the edge workload family."""
+    layers: List[LayerSpec] = [conv(8, relu=True, name="stem")]
+    layers += _inverted_residual(1, "stem", 8, 8, 1)            # skip add
+    layers += _inverted_residual(2, "m1", 8, 16, 2)             # 8×8
+    layers += _inverted_residual(3, "m2p", 16, 16, 1)           # skip add
+    layers += [global_pool(), dense(classes)]
+    return NetworkPlan(name="mobilenet_v2ish", input_shape=input_shape,
                        layers=tuple(layers))
 
 

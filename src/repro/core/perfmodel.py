@@ -32,11 +32,16 @@ class IPCoreConfig:
 
 
 def psum_count(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
-               stride: int = 1, padding="VALID") -> int:
+               stride: int = 1, padding="VALID", groups: int = 1) -> int:
     """One psum per (output pixel × kernel × input channel); stride/padding
-    change only the output pixel count."""
+    change only the output pixel count.  ``groups > 1`` contracts only the
+    C/groups channels of each kernel's group — a depthwise layer
+    (groups == C) computes a factor-C fewer psums than its dense
+    counterpart while moving the SAME feature maps, which is exactly why
+    its cycles floor at the shared DMA interface, not at compute
+    (``network_report`` flags this per layer)."""
     oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
-    return oh * ow * k * c
+    return oh * ow * k * (c // groups)
 
 
 def cycles(n_psums: int, cfg: IPCoreConfig = IPCoreConfig()) -> int:
@@ -128,7 +133,12 @@ def network_report(layers: Sequence[Tuple[str, int]],
     pipeline overlaps the two — with tile revisits and halo re-reads
     priced by ``tile_traffic``.  The DMA interface is SHARED across
     replicated IP cores, so full-board cycles floor at the same DMA time:
-    that is what keeps the 20-core GOPS honest on large maps."""
+    that is what keeps the 20-core GOPS honest on large maps.  Each
+    priced row carries ``dma_bound`` / ``dma_bound_board`` flags — on
+    depthwise/grouped layers the psum count collapses by the group factor
+    while the feature-map traffic stays put, so the shared-DMA floor, not
+    compute, is what binds (visibly so on the full board, where compute
+    divides by the core count and the DMA interface does not)."""
     board = replace(cfg, ip_cores=full_board_cores)
     if tile_plans is None:
         tile_plans = [None] * len(layers)
@@ -144,7 +154,9 @@ def network_report(layers: Sequence[Tuple[str, int]],
             row.update(dma_bytes=traffic["total_bytes"], dma_cycles=dma,
                        halo_read_factor=traffic["halo_read_factor"],
                        n_tiles=tp.n_tiles,
-                       cycles=max(compute, dma) if p else dma)
+                       cycles=max(compute, dma) if p else dma,
+                       dma_bound=dma >= compute,
+                       dma_bound_board=dma >= compute_board)
             total += row["cycles"]
             total_board += max(compute_board, dma) if p else dma
         else:
@@ -154,6 +166,10 @@ def network_report(layers: Sequence[Tuple[str, int]],
     total_psums = sum(p for _, p in layers)
     return {
         "layers": per_layer,
+        # how many priced layers the SHARED DMA interface binds on the
+        # full board — the depthwise/grouped arithmetic-intensity story
+        "dma_bound_board_layers": sum(
+            1 for r in per_layer if r.get("dma_bound_board")),
         "psums": total_psums,
         "cycles": total,
         "seconds": total / cfg.clock_hz,

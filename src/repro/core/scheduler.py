@@ -55,7 +55,18 @@ class KoutShardedBackend:
     """Backend decorator: split every conv/matmul's output channels across
     ``n_cores`` virtual IP cores and concatenate (paper kernel-set
     division).  Each shard sees the full input map — weight-stationary per
-    core, exactly the replicated-core dataflow."""
+    core, exactly the replicated-core dataflow.
+
+    Grouped convs shard along GROUP boundaries: a core's contiguous
+    kernel-set slice must either tile one group (a dense conv over that
+    group's cin slice) or cover whole groups (a narrower grouped conv
+    over their cin slices) — each core then DMAs only the input channels
+    its kernel sets actually read, the grouped reading of "each core
+    convolves the same feature map with its kernel slice".  A core count
+    that would cut through a group mid-slice raises a ``ValueError`` with
+    the offending shapes instead of silently degrading the core count
+    the way dense convs do (``_shards``): silently running a depthwise
+    layer on fewer cores than configured would misreport the fabric."""
 
     def __init__(self, inner: Backend, n_cores: int):
         self.inner = inner
@@ -68,8 +79,12 @@ class KoutShardedBackend:
             n -= 1
         return n
 
-    def conv(self, x, w, bias=None, *, out_scale=None, plan=None, **kw):
+    def conv(self, x, w, bias=None, *, groups=1, out_scale=None, plan=None,
+             **kw):
         k = w.shape[-1]
+        if groups > 1:
+            return self._conv_grouped(x, w, bias, groups=groups,
+                                      out_scale=out_scale, plan=plan, **kw)
         n = self._shards(k)
         if n == 1:
             return self.inner.conv(x, w, bias, out_scale=out_scale,
@@ -86,6 +101,44 @@ class KoutShardedBackend:
                 out_scale=(out_scale if out_scale is None
                            or jnp.ndim(out_scale) == 0 else out_scale[sl]),
                 plan=plan, **kw))
+        return jnp.concatenate(outs, axis=-1)
+
+    def _conv_grouped(self, x, w, bias, *, groups, out_scale, plan, **kw):
+        """Kernel-set division of a grouped conv: each core's contiguous
+        K/n slice stays group-aligned (tiles one group, or covers whole
+        groups) and reads only the matching cin slice."""
+        k = w.shape[-1]
+        kg = k // groups                     # kernels per group
+        cgrp = x.shape[-1] // groups         # cin channels per group
+        n = min(self.n_cores, k)
+        if n == 1:
+            return self.inner.conv(x, w, bias, groups=groups,
+                                   out_scale=out_scale, plan=plan, **kw)
+        s = k // n                           # kernel sets per core
+        if k % n or (kg % s and s % kg):
+            raise ValueError(
+                f"kout sharding cannot split K={k} kernels "
+                f"(groups={groups}, {kg} kernels/group) across "
+                f"{self.n_cores} cores: each core's slice of {k}/{n} "
+                f"kernel sets must tile a group or cover whole groups")
+        outs = []
+        for i in range(n):                   # one iteration per fabric core
+            sl = slice(i * s, (i + 1) * s)
+            gi0, gi1 = (i * s) // kg, ((i + 1) * s - 1) // kg + 1
+            g_s = gi1 - gi0 if s >= kg else 1    # shard's group count
+            shard_plan = plan
+            if plan is not None:
+                if s >= kg:                  # whole groups: keep banks/group
+                    kb_n = g_s * max(1, plan.kout_banks // groups)
+                else:                        # within one group: dense shard
+                    kb_n = divisor_banks(s, plan.kout_banks)
+                shard_plan = replace(plan, kout_banks=kb_n, groups=g_s)
+            outs.append(self.inner.conv(
+                x[..., gi0 * cgrp:gi1 * cgrp], w[..., sl],
+                None if bias is None else bias[sl], groups=g_s,
+                out_scale=(out_scale if out_scale is None
+                           or jnp.ndim(out_scale) == 0 else out_scale[sl]),
+                plan=shard_plan, **kw))
         return jnp.concatenate(outs, axis=-1)
 
     def matmul(self, x, w, bias=None):

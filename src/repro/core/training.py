@@ -98,6 +98,7 @@ def float_forward(plan: NetworkPlan, params: Sequence[Optional[dict]],
     parametric layer stays unquantized on its output, like the deployed
     program's dequantized logits."""
     ins = plan.resolved_inputs()
+    geoms = plan.conv_geometries()
     last_param = max((i for i, sp in enumerate(plan.layers)
                       if sp.kind in ("conv", "dense")), default=-1)
     x0 = fake_quant_act(x) if qat else x
@@ -107,11 +108,12 @@ def float_forward(plan: NetworkPlan, params: Sequence[Optional[dict]],
         src = [x0 if j < 0 else acts[j] for j in ins[i]]
         h = src[0]
         if sp.kind == "conv":
+            k_, g_ = geoms[i]
             w = fake_quant_weight(p["w"], per_channel) if qat else p["w"]
+            cb_n, kb_n = banking.grouped_banks(h.shape[-1], k_, g_)
             h = ops.conv2d(
                 h, w, p["b"], stride=sp.stride, padding=sp.padding,
-                cin_banks=banking.divisor_banks(h.shape[-1], 4),
-                kout_banks=banking.divisor_banks(sp.features, 4),
+                groups=g_, cin_banks=cb_n, kout_banks=kb_n,
                 relu=sp.relu, pool=sp.pool)
             if qat and i != last_param:
                 h = fake_quant_act(h)

@@ -73,7 +73,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ref import conv_out_shape, halo_window, normalize_padding
+from repro.kernels.ref import (check_groups, conv_out_shape, halo_window,
+                               normalize_padding)
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
@@ -125,16 +126,17 @@ def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "stride", "padding", "cin_banks", "kout_banks", "h_tile", "w_tile",
-    "relu", "pool", "interpret"))
+    "stride", "padding", "groups", "cin_banks", "kout_banks", "h_tile",
+    "w_tile", "relu", "pool", "interpret"))
 def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
-              padding="VALID", cin_banks: int = 4, kout_banks: int = 4,
-              h_tile: int = 0, w_tile: int = 0, relu: bool = False,
-              pool: bool = False, interpret: bool = False):
+              padding="VALID", groups: int = 1, cin_banks: int = 4,
+              kout_banks: int = 4, h_tile: int = 0, w_tile: int = 0,
+              relu: bool = False, pool: bool = False,
+              interpret: bool = False):
     """Generalized paper-dataflow convolution with fused epilogue and
     halo-aware spatial tiling.
 
-    x: [N,H,W,C]; w: [KH,KW,C,K]; bias: [K] or None → [N,OH,OW,K]
+    x: [N,H,W,C]; w: [KH,KW,C/groups,K]; bias: [K] or None → [N,OH,OW,K]
     (f32 accumulate for float inputs, int32 for int8 inputs).
 
     stride / padding: any stride ≥ 1; "SAME" | "VALID" | int |
@@ -143,6 +145,18 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
     semantics), ``out_scale`` (requantize to int8; scalar or per-channel
     [K]).
 
+    groups: grouped channel contraction (1 = dense, ``groups == C`` =
+    depthwise).  The grid shape is unchanged — kout banks are constrained
+    to group boundaries (``kout_banks % groups == 0``, so every kout
+    bank's kernel set lives inside ONE group) and the input BlockSpec's
+    channel index gains the group offset: the cin sweep of kout bank
+    ``ko`` walks only its group's C/groups-channel slice.  The per-bank
+    weight block, the accumulator revisit pattern, and the halo'd H/W
+    tiling are identical to the dense dataflow — a depthwise layer is
+    simply the degenerate one-cin-bank sweep per kernel set, which is why
+    its arithmetic intensity collapses onto the DMA roofline
+    (core/perfmodel prices this).
+
     h_tile / w_tile: conv-output tile extents (pre-pool pixels).  0 means
     "whole map" (one spatial tile — the seed dataflow).  Tiles need not
     divide the output: the trailing tile is computed on zero-extended
@@ -150,14 +164,26 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
     pool windows never straddle tile edges.  core/banking.plan_tiles
     picks sizes that fit the VMEM budget.
 
-    cin_banks/kout_banks default to the paper's 4×4 banking; C and K must
-    divide by them (the paper's divisible-by-4 invariant, §4.1).
+    cin_banks/kout_banks default to the paper's 4×4 banking; C/groups and
+    K must divide by them (the paper's divisible-by-4 invariant, §4.1 —
+    ``ref.grouped_banks`` degrades the defaults legally for grouped
+    layers).
     """
     n, h, w_dim, c = x.shape
     kh, kw, c2, k = w.shape
-    assert c == c2, (c, c2)
-    assert c % cin_banks == 0 and k % kout_banks == 0, (
-        "paper banking invariant: C and K divisible by the bank counts")
+    check_groups(c, k, groups)
+    cgrp = c // groups
+    assert cgrp == c2, ("weights carry the per-group channel slice: "
+                        "w.shape[2] must be C/groups", c, groups, c2)
+    if groups > 1 and kout_banks % groups:
+        raise ValueError(
+            f"grouped conv needs kout banks that split along group "
+            f"boundaries: kout_banks={kout_banks} is not a multiple "
+            f"of groups={groups} (C={c}, K={k})")
+    if cgrp % cin_banks or k % kout_banks:
+        raise ValueError(
+            f"paper banking invariant (§4.1): C/groups={cgrp} and K={k} "
+            f"must divide by the bank counts ({cin_banks}, {kout_banks})")
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
                                             h, w_dim)
     oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
@@ -194,7 +220,10 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
     else:
         pth, ptw = th, tw
         poh, pow_ = oh, ow
-    cb, kb = c // cin_banks, k // kout_banks
+    # per-bank blocks live inside ONE group: the cin sweep covers only the
+    # C/groups channels a kout bank's kernel set reads (dense: the whole C)
+    cb, kb = cgrp // cin_banks, k // kout_banks
+    bpg = kout_banks // groups           # kout banks per group
 
     int_path = x.dtype == jnp.int8
     acc_dtype = jnp.int32 if int_path else jnp.float32
@@ -208,17 +237,24 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
         jnp.asarray(1.0 if out_scale is None else out_scale, jnp.float32),
         (k,))
 
+    # the channel index of the input block carries the GROUP offset: kout
+    # bank ko belongs to group ko // bpg, whose cin slice starts at
+    # (ko // bpg) · C/groups — the cin sweep (co) walks only that slice.
+    # Dense convs have bpg == kout_banks, so the offset is always 0.
     if tiled:
         # overlapping halo'd windows: element-granularity indexing (block
         # stride th·s ≠ block extent in_th)
         x_spec = pl.BlockSpec(
             (1, in_th, in_tw, cb),
             lambda b, ty, tx, ko, co: (b, ty * th * stride,
-                                       tx * tw * stride, co * cb),
+                                       tx * tw * stride,
+                                       (ko // bpg) * cgrp + co * cb),
             indexing_mode=pl.unblocked)
     else:
-        x_spec = pl.BlockSpec((1, hp, wp, cb),
-                              lambda b, ty, tx, ko, co: (b, 0, 0, co))
+        x_spec = pl.BlockSpec(
+            (1, hp, wp, cb),
+            lambda b, ty, tx, ko, co: (b, 0, 0,
+                                       (ko // bpg) * cin_banks + co))
 
     kernel = functools.partial(
         _conv_kernel, kh=kh, kw=kw, stride=stride, cin_banks=cin_banks,

@@ -36,40 +36,39 @@ import jax.numpy as jnp
 
 from repro.kernels.conv2d_ws import conv2d_ws
 from repro.kernels.matmul_ws import matmul_ws
-from repro.kernels.ref import normalize_padding
-
-
-def _divisor_banks(dim: int, want: int) -> int:
-    """Largest bank count ≤ want dividing dim (mirrors banking.divisor_banks
-    without importing core — kernels stay below core in the layering)."""
-    b = max(1, min(want, dim))
-    while dim % b:
-        b -= 1
-    return b
+from repro.kernels.ref import (check_groups, grouped_banks,
+                               grouped_transpose_weights, normalize_padding)
 
 
 def conv2d_ws_input_grad(g, w, x_shape, *, stride: int = 1,
-                         padding="VALID", cin_banks: int = 4,
-                         kout_banks: int = 4, h_tile: int = 0,
-                         w_tile: int = 0, interpret: bool = False):
+                         padding="VALID", groups: int = 1,
+                         cin_banks: int = 4, kout_banks: int = 4,
+                         h_tile: int = 0, w_tile: int = 0,
+                         interpret: bool = False):
     """dL/dx [N,H,W,C] from cotangent ``g`` [N,OH,OW,K] and weights ``w``
-    [KH,KW,C,K], through the forward WS kernel:
+    [KH,KW,C/groups,K], through the forward WS kernel:
 
     1. zero-insertion-dilate ``g`` by the forward stride (the transposed
        conv's lhs dilation, materialized the way the FPGA would write a
        sparse map into its image BRAMs);
-    2. flip the kernel spatially and swap its channel axes → [KH,KW,K,C];
+    2. flip the kernel spatially and swap its channel axes per group →
+       [KH,KW,K/groups,C] (ref.grouped_transpose_weights);
     3. run ``conv2d_ws`` at stride 1 under "full" padding
        (kh−1−pt …), slicing the dilated map first wherever the full
        padding is negative (forward padding larger than the kernel).
+
+    The transposed conv inherits the forward's group structure: the
+    cotangent's K channels play the cin role (K/groups per group) and the
+    forward input's C channels the kout role, so a depthwise forward has
+    a depthwise backward — the same degenerate one-cin-bank sweep.
 
     ``h_tile``/``w_tile`` tile the OUTPUT map (= the forward input), so
     gradient maps larger than VMEM stream through the same halo'd blocks
     as the forward pass.
     """
     n, h, w_dim, c = x_shape
-    kh, kw, c2, k = w.shape
-    assert c == c2, (c, c2)
+    kh, kw, cg, k = w.shape
+    assert c == cg * groups, (c, cg, groups)
     assert g.shape[0] == n and g.shape[3] == k, (g.shape, x_shape, w.shape)
     (pt, _), (pl_, _) = normalize_padding(padding, kh, kw, stride, h, w_dim)
     oh, ow = g.shape[1], g.shape[2]
@@ -89,31 +88,40 @@ def conv2d_ws_input_grad(g, w, x_shape, *, stride: int = 1,
         top, bot, left, right = (max(0, -p) for p in pads)
         gd = gd[:, top:gd.shape[1] - bot, left:gd.shape[2] - right, :]
         pads = [max(0, p) for p in pads]
-    wt = jnp.flip(w, (0, 1)).swapaxes(2, 3).astype(jnp.float32)
+    wt = grouped_transpose_weights(w, groups).astype(jnp.float32)
 
+    # channel roles swap in the transposed conv (K plays cin, C plays
+    # kout), so the bank requests re-legalize against (K, C)
+    cb_n, kb_n = grouped_banks(k, c, groups, want_cin=cin_banks,
+                               want_kout=max(kout_banks, groups))
     return conv2d_ws(
         gd, wt, None, stride=1,
         padding=((pads[0], pads[1]), (pads[2], pads[3])),
-        cin_banks=_divisor_banks(k, cin_banks),
-        kout_banks=_divisor_banks(c, kout_banks),
+        groups=groups, cin_banks=cb_n, kout_banks=kb_n,
         h_tile=h_tile, w_tile=w_tile, interpret=interpret)
 
 
 def conv2d_ws_weight_grad(x, g, kh: int, kw: int, *, stride: int = 1,
-                          padding="VALID", interpret: bool = False):
-    """dL/dw [KH,KW,C,K] from input ``x`` [N,H,W,C] and cotangent ``g``
-    [N,OH,OW,K], as KH·KW weight-stationary GEMMs: tap (dy,dx) contracts
-    the strided input window starting at (dy,dx) with the cotangent over
-    the N·OH·OW stream —
+                          padding="VALID", groups: int = 1,
+                          interpret: bool = False):
+    """dL/dw [KH,KW,C/groups,K] from input ``x`` [N,H,W,C] and cotangent
+    ``g`` [N,OH,OW,K], as KH·KW weight-stationary GEMMs: tap (dy,dx)
+    contracts the strided input window starting at (dy,dx) with the
+    cotangent over the N·OH·OW stream —
 
         dW[dy,dx] = x_window(dy,dx)ᵀ [C, N·OH·OW] @ g [N·OH·OW, K]
 
     the batched-correlation form of the weight gradient, on the same MXU
     dataflow as the forward's shifted-matmul decomposition (the cotangent
-    block is the stationary operand of each GEMM)."""
+    block is the stationary operand of each GEMM).  With ``groups > 1``
+    each tap runs one GEMM per group — kernel set k only ever saw its
+    group's C/groups input channels, so the per-group GEMMs reassemble
+    into the forward's [KH,KW,C/groups,K] weight layout."""
     n, h, w_dim, c = x.shape
     assert g.shape[0] == n, (x.shape, g.shape)
     oh, ow, k = g.shape[1], g.shape[2], g.shape[3]
+    check_groups(c, k, groups)
+    cg, kg = c // groups, k // groups
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h,
                                             w_dim)
     xp = jnp.pad(x.astype(jnp.float32),
@@ -127,5 +135,12 @@ def conv2d_ws_weight_grad(x, g, kh: int, kw: int, *, stride: int = 1,
                 (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
                  c), (1, stride, stride, 1))
             xm = xs.reshape(n * oh * ow, c)
-            taps.append(matmul_ws(xm.T, gm, interpret=interpret))
-    return jnp.stack(taps).reshape(kh, kw, c, k)
+            if groups == 1:
+                taps.append(matmul_ws(xm.T, gm, interpret=interpret))
+            else:
+                taps.append(jnp.concatenate(
+                    [matmul_ws(xm[:, i * cg:(i + 1) * cg].T,
+                               gm[:, i * kg:(i + 1) * kg],
+                               interpret=interpret)
+                     for i in range(groups)], axis=1))
+    return jnp.stack(taps).reshape(kh, kw, cg, k)

@@ -91,6 +91,7 @@ class _ConvCfg(NamedTuple):
     needs no shape context in the backward rules)."""
     stride: int
     padding: Tuple[Tuple[int, int], Tuple[int, int]]
+    groups: int
     cin_banks: int
     kout_banks: int
     h_tile: int
@@ -104,7 +105,8 @@ def _conv2d_float(cfg: _ConvCfg, x, w, bias):
     """Float-accumulator conv with the fused ReLU → 2×2-max-pool epilogue
     and a paper-dataflow backward (see _conv2d_float_bwd)."""
     return _conv_mod.conv2d_ws(x, w, bias, None, stride=cfg.stride,
-                               padding=cfg.padding, cin_banks=cfg.cin_banks,
+                               padding=cfg.padding, groups=cfg.groups,
+                               cin_banks=cfg.cin_banks,
                                kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
                                w_tile=cfg.w_tile, relu=cfg.relu,
                                pool=cfg.pool, interpret=_interpret())
@@ -117,7 +119,8 @@ def _conv2d_float_fwd(cfg: _ConvCfg, x, w, bias):
     only the epilogue MASKS as residuals: the ReLU sign bits and the pool
     argmax indices, 1 byte each per accumulator cell instead of 4."""
     acc = _conv_mod.conv2d_ws(x, w, bias, None, stride=cfg.stride,
-                              padding=cfg.padding, cin_banks=cfg.cin_banks,
+                              padding=cfg.padding, groups=cfg.groups,
+                              cin_banks=cfg.cin_banks,
                               kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
                               w_tile=cfg.w_tile, interpret=_interpret())
     relu_mask = pool_idx = None
@@ -149,12 +152,13 @@ def _conv2d_float_bwd(cfg: _ConvCfg, res, g):
         dacc = dacc * relu_mask
     dx = _bwd_mod.conv2d_ws_input_grad(
         dacc, w, x.shape, stride=cfg.stride, padding=cfg.padding,
-        cin_banks=cfg.cin_banks, kout_banks=cfg.kout_banks,
-        h_tile=cfg.h_tile, w_tile=cfg.w_tile,
+        groups=cfg.groups, cin_banks=cfg.cin_banks,
+        kout_banks=cfg.kout_banks, h_tile=cfg.h_tile, w_tile=cfg.w_tile,
         interpret=_interpret()).astype(x.dtype)
     dw = _bwd_mod.conv2d_ws_weight_grad(
         x, dacc, w.shape[0], w.shape[1], stride=cfg.stride,
-        padding=cfg.padding, interpret=_interpret()).astype(w.dtype)
+        padding=cfg.padding, groups=cfg.groups,
+        interpret=_interpret()).astype(w.dtype)
     # like _matmul_bwd: reduce in f32, cast only the result to the bias dtype
     db = (jnp.sum(dacc, axis=(0, 1, 2)).astype(bias.dtype)
           if bias is not None else None)
@@ -165,12 +169,19 @@ _conv2d_float.defvjp(_conv2d_float_fwd, _conv2d_float_bwd)
 
 
 def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
-           cin_banks: int = 4, kout_banks: int = 4, h_tile: int = 0,
-           w_tile: int = 0, relu: bool = False, pool: bool = False,
-           wrap8: bool = False, out_scale=None):
+           groups: int = 1, cin_banks: int = 4, kout_banks: int = 4,
+           h_tile: int = 0, w_tile: int = 0, relu: bool = False,
+           pool: bool = False, wrap8: bool = False, out_scale=None):
     """Paper-dataflow convolution (arbitrary stride / SAME|VALID|explicit
     padding, fused ReLU → 2×2 max-pool → requantize epilogue, halo-aware
     spatial tiling via h_tile/w_tile — 0 = whole map).
+
+    ``groups`` selects grouped channel contraction (w: [KH,KW,C/groups,K];
+    1 = dense, ``groups == C`` = depthwise — the MobileNet workload
+    family).  For grouped layers the requested bank counts re-legalize
+    through ``ref.grouped_banks`` (cin banks must divide the per-group
+    slice, kout banks split along group boundaries); dense layers keep
+    the strict paper invariant.
 
     float in → f32 out; int8 in → int32 out.  ``out_scale`` requantizes
     in-kernel (acc × scale → int8) on EITHER accumulator path — int32 for
@@ -194,19 +205,25 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     if wrap8 and out_scale is not None:
         raise ValueError("wrap8 and out_scale are mutually exclusive: the "
                          "Fig. 6 wrap path has no requantize stage")
+    if groups > 1:
+        # re-legalize the requested banking for the group structure (the
+        # kernel rejects banks that straddle group boundaries)
+        cin_banks, kout_banks = _ref.grouped_banks(
+            x.shape[3], w.shape[3], groups, want_cin=cin_banks,
+            want_kout=kout_banks)
     if (out_scale is None and not wrap8
             and jnp.issubdtype(jnp.result_type(x), jnp.floating)):
         pad = _ref.normalize_padding(padding, w.shape[0], w.shape[1],
                                      stride, x.shape[1], x.shape[2])
-        cfg = _ConvCfg(stride=stride, padding=pad, cin_banks=cin_banks,
-                       kout_banks=kout_banks, h_tile=h_tile, w_tile=w_tile,
-                       relu=relu, pool=pool)
+        cfg = _ConvCfg(stride=stride, padding=pad, groups=groups,
+                       cin_banks=cin_banks, kout_banks=kout_banks,
+                       h_tile=h_tile, w_tile=w_tile, relu=relu, pool=pool)
         return _conv2d_float(cfg, x, w, bias)
     out = _conv_mod.conv2d_ws(x, w, bias, out_scale, stride=stride,
-                              padding=padding, cin_banks=cin_banks,
-                              kout_banks=kout_banks, h_tile=h_tile,
-                              w_tile=w_tile, relu=relu, pool=pool,
-                              interpret=_interpret())
+                              padding=padding, groups=groups,
+                              cin_banks=cin_banks, kout_banks=kout_banks,
+                              h_tile=h_tile, w_tile=w_tile, relu=relu,
+                              pool=pool, interpret=_interpret())
     if x.dtype == jnp.int8 and wrap8:
         return out.astype(jnp.int8)
     return out
@@ -224,10 +241,19 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 def conv1d_depthwise(x, w, bias=None):
-    """Causal depthwise temporal conv via the WS-GEMM dataflow.
+    """Causal depthwise temporal conv through the grouped WS conv kernel.
 
-    x: [B,S,W], w: [K,W].  Depthwise conv = K shifted elementwise MACs —
-    on TPU these fuse into the surrounding ops; routed through the ref
-    implementation (the conv2d kernel targets the paper's dense conv)."""
-    from repro.kernels.ref import conv1d_depthwise_ref
-    return conv1d_depthwise_ref(x, w, bias)
+    x: [B,S,W], w: [K,W] → [B,S,W] (in x's dtype).  The temporal conv is
+    a width-grouped 1×K conv2d over a height-1 map: the sequence plays
+    the spatial W axis, causality is left-padding of K−1, and
+    ``groups == W`` makes every lane its own group — the depthwise case
+    of the paper dataflow (one image BMG per lane, kernel-set banks on
+    group boundaries).  Going through ``conv2d`` keeps the grouped
+    custom VJP, so the temporal conv stays differentiable inside
+    training graphs.  The old pass-through to the ref oracle is gone;
+    ``ref.conv1d_depthwise_ref`` remains the correctness contract."""
+    k, width = w.shape
+    acc = conv2d(x[:, None], w[None, :, None, :], bias, stride=1,
+                 padding=((0, 0), (k - 1, 0)), groups=width,
+                 cin_banks=1, kout_banks=width)[:, 0]
+    return acc.astype(x.dtype)

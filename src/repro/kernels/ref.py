@@ -55,18 +55,64 @@ def halo_window(tile: int, stride: int, k: int) -> int:
     return (tile - 1) * stride + k
 
 
+def divisor_banks(dim: int, want: int) -> int:
+    """Largest bank count ≤ ``want`` that divides ``dim`` — how the paper's
+    divisible-by-4 invariant degrades for awkward channel counts (e.g. the
+    C=1 input layer of a grayscale network runs on a single image BMG).
+    Lives here (with the other shared shape math) so kernels and the core
+    planner agree without a layering inversion."""
+    b = max(1, min(want, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
+def grouped_banks(c: int, k: int, groups: int = 1, want_cin: int = 4,
+                  want_kout: int = 4) -> Tuple[int, int]:
+    """Legal (cin_banks, kout_banks) for a grouped conv, degraded from the
+    requested paper banking: cin banks must divide the per-group channel
+    slice C/g (the only channels a kernel set reads), and kout banks must
+    split along group boundaries — ``kout_banks % groups == 0`` with the
+    banks-per-group count dividing K/g — so every kout bank's weight block
+    stays inside one group's cin slice.  Depthwise (g == C) degenerates to
+    one cin bank and one kout bank per channel."""
+    check_groups(c, k, groups)
+    cg, kg = c // groups, k // groups
+    cin = divisor_banks(cg, want_cin)
+    bpg = divisor_banks(kg, max(1, want_kout // groups))
+    return cin, groups * bpg
+
+
+def check_groups(c: int, k: int, groups: int) -> None:
+    """The grouped-conv divisibility contract, shared by oracle / kernel /
+    planner / compiler so they all reject the same shapes the same way:
+    ``groups`` must divide both the input and output channel counts
+    (``groups == c`` is the depthwise case)."""
+    if groups < 1 or c % groups or k % groups:
+        raise ValueError(
+            f"groups={groups} must divide both C={c} and K={k} "
+            f"(groups == C is depthwise)")
+
+
 def conv2d_ref(x, w, bias=None, *, stride: int = 1,
-               padding: Padding = "VALID", accum_dtype=jnp.float32):
-    """General convolution oracle.  x: [N,H,W,C]; w: [KH,KW,C,K] → [N,OH,OW,K].
+               padding: Padding = "VALID", groups: int = 1,
+               accum_dtype=jnp.float32):
+    """General convolution oracle.  x: [N,H,W,C]; w: [KH,KW,C/groups,K] →
+    [N,OH,OW,K].
 
     The paper's Eq. (2): F(i,j) = Σ_d Σ_m Σ_n I(i·s+m, j·s+n, d) · K(m,n,d),
-    extended with stride s and zero padding."""
+    extended with stride s, zero padding, and grouped channel contraction
+    (``groups > 1``): output kernel k only reads the C/groups input
+    channels of its group — ``groups == C`` is the depthwise conv of the
+    MobileNet workload family."""
+    check_groups(x.shape[3], w.shape[3], groups)
     pad = normalize_padding(padding, w.shape[0], w.shape[1], stride,
                             x.shape[1], x.shape[2])
     out = jax.lax.conv_general_dilated(
         x.astype(accum_dtype), w.astype(accum_dtype),
         window_strides=(stride, stride), padding=pad,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
         preferred_element_type=accum_dtype)
     if bias is not None:
         out = out + bias.astype(accum_dtype)
@@ -74,17 +120,19 @@ def conv2d_ref(x, w, bias=None, *, stride: int = 1,
 
 
 def conv2d_ref_int8(x, w, bias=None, *, stride: int = 1,
-                    padding: Padding = "VALID"):
+                    padding: Padding = "VALID", groups: int = 1):
     """int8 × int8 → int32 accumulation (production 8-bit datapath).
 
     Zero padding is exact for the symmetric (zero-point-0) int8 scheme."""
     assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    check_groups(x.shape[3], w.shape[3], groups)
     pad = normalize_padding(padding, w.shape[0], w.shape[1], stride,
                             x.shape[1], x.shape[2])
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.int32), w.astype(jnp.int32),
         window_strides=(stride, stride), padding=pad,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
     if bias is not None:
         out = out + bias.astype(jnp.int32)
     return out
@@ -164,14 +212,18 @@ def add_requant_ref(a, b, scale_a, scale_b, *, relu: bool = False):
 
 def conv2d_epilogue_ref(x, w, bias=None, *, stride: int = 1,
                         padding: Padding = "VALID", relu: bool = False,
-                        pool: bool = False, out_scale=None):
+                        pool: bool = False, out_scale=None,
+                        groups: int = 1):
     """Conv + the fused FPGA post-processing chain: ReLU → 2×2 max-pool →
     requantize, in accumulator precision (the oracle for the fused kernel
-    epilogue)."""
+    epilogue).  ``groups`` selects grouped/depthwise channel contraction
+    like ``conv2d_ref``."""
     if x.dtype == jnp.int8:
-        acc = conv2d_ref_int8(x, w, bias, stride=stride, padding=padding)
+        acc = conv2d_ref_int8(x, w, bias, stride=stride, padding=padding,
+                              groups=groups)
     else:
-        acc = conv2d_ref(x, w, bias, stride=stride, padding=padding)
+        acc = conv2d_ref(x, w, bias, stride=stride, padding=padding,
+                         groups=groups)
     if relu:
         acc = jnp.maximum(acc, 0)
     if pool:
@@ -195,42 +247,66 @@ def conv2d_ref_wrap8(x, w, bias=None):
 # ---------------------------------------------------------------------------
 
 
+def grouped_transpose_weights(w, groups: int = 1):
+    """Forward weights [KH,KW,C/groups,K] → transposed-conv weights
+    [KH,KW,K/groups,C]: spatial flip + per-group channel-axis swap, groups
+    reassembled along the new output axis.  The single definition shared
+    by the input-gradient oracle and the WS backward kernel — in the
+    transposed conv the cotangent's K channels play the input role (K/g
+    per group) and the forward input's C channels the output role."""
+    kh, kw, cg, k = w.shape
+    kg = k // groups
+    wt = jnp.flip(w, (0, 1))
+    if groups == 1:
+        return wt.swapaxes(2, 3)
+    return (wt.reshape(kh, kw, cg, groups, kg)
+            .transpose(0, 1, 4, 3, 2).reshape(kh, kw, kg, groups * cg))
+
+
 def conv2d_input_grad_ref(g, w, x_shape, *, stride: int = 1,
-                          padding: Padding = "VALID"):
+                          padding: Padding = "VALID", groups: int = 1):
     """dL/dx of ``conv2d_ref``: the transposed convolution, stated directly
     as zero-insertion dilation + kernel flip (NOT via jax.vjp, so it is an
     independent contract for the WS backward kernel).
 
     The cotangent ``g`` [N,OH,OW,K] dilates by the forward stride
     (zero-insertion), the kernel flips spatially and swaps its channel
-    axes ([KH,KW,C,K] → [KH,KW,K,C]), and a stride-1 correlation with
-    "full" padding (kh−1−pt on top, h+pt−(oh−1)·s−1 on the bottom — rows
-    the strided forward never reached get negative padding) recovers
+    axes per group ([KH,KW,C/g,K] → [KH,KW,K/g,C] —
+    ``grouped_transpose_weights``), and a stride-1 grouped correlation
+    with "full" padding (kh−1−pt on top, h+pt−(oh−1)·s−1 on the bottom —
+    rows the strided forward never reached get negative padding) recovers
     [N,H,W,C]."""
     n, h, w_dim, c = x_shape
-    kh, kw, c2, k = w.shape
-    assert c == c2, (c, c2)
+    kh, kw, cg, k = w.shape
+    assert c == cg * groups, (c, cg, groups)
     (pt, _), (pl_, _) = normalize_padding(padding, kh, kw, stride, h, w_dim)
     oh, ow = g.shape[1], g.shape[2]
-    wt = jnp.flip(w, (0, 1)).swapaxes(2, 3)
+    wt = grouped_transpose_weights(w, groups)
     return jax.lax.conv_general_dilated(
         g.astype(jnp.float32), wt.astype(jnp.float32), (1, 1),
         ((kh - 1 - pt, h + pt - (oh - 1) * stride - 1),
          (kw - 1 - pl_, w_dim + pl_ - (ow - 1) * stride - 1)),
         lhs_dilation=(stride, stride),
+        feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
 def conv2d_weight_grad_ref(x, g, kh: int, kw: int, *, stride: int = 1,
-                           padding: Padding = "VALID"):
+                           padding: Padding = "VALID", groups: int = 1):
     """dL/dw of ``conv2d_ref``: a batched correlation — tap (dy,dx) of the
     weight gradient contracts the stride-strided input window starting at
     (dy,dx) with the cotangent over (N,OH,OW):
 
         dW[dy,dx,c,k] = Σ_{n,i,j} x_pad[n, i·s+dy, j·s+dx, c] · g[n,i,j,k]
-    """
+
+    With ``groups > 1`` the contraction stays within each group: output
+    kernel k in group i only ever saw that group's C/g input channels, so
+    the tap einsum carries a group axis and dW keeps the forward's
+    [KH,KW,C/g,K] layout."""
     n, h, w_dim, c = x.shape
     oh, ow, k = g.shape[1], g.shape[2], g.shape[3]
+    check_groups(c, k, groups)
+    cg, kg = c // groups, k // groups
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h,
                                             w_dim)
     xp = jnp.pad(x.astype(jnp.float32),
@@ -243,8 +319,15 @@ def conv2d_weight_grad_ref(x, g, kh: int, kw: int, *, stride: int = 1,
                 xp, (0, dy, dx, 0),
                 (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
                  c), (1, stride, stride, 1))
-            taps.append(jnp.einsum("nijc,nijk->ck", xs, gf))
-    return jnp.stack(taps).reshape(kh, kw, c, k)
+            if groups == 1:
+                taps.append(jnp.einsum("nijc,nijk->ck", xs, gf))
+            else:
+                tap = jnp.einsum(
+                    "nijgc,nijgk->gck",
+                    xs.reshape(n, oh, ow, groups, cg),
+                    gf.reshape(n, oh, ow, groups, kg))
+                taps.append(tap.transpose(1, 0, 2).reshape(cg, k))
+    return jnp.stack(taps).reshape(kh, kw, cg, k)
 
 
 def conv2d_bias_grad_ref(g):

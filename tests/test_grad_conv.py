@@ -87,6 +87,60 @@ def test_conv_grads_fd_and_oracle_sweep(seed, stride, padding, relu, pool):
                                    rtol=1e-4, atol=1e-4)
 
 
+GROUPED_SWEEP = [(groups, stride, relu, pool)
+                 for groups in (2, 4, 8)
+                 for stride in (1, 2)
+                 for relu, pool in ((False, False), (True, True))]
+
+
+@pytest.mark.parametrize("seed,groups,stride,relu,pool",
+                         [(i, *cfg) for i, cfg in enumerate(GROUPED_SWEEP)])
+def test_grouped_conv_grads_fd_and_oracle(seed, groups, stride, relu, pool):
+    """Grouped/depthwise conv gradients (C=K=8, groups up to depthwise):
+    finite differences + jax.grad of the grouped oracle.  The backward
+    runs the grouped transposed conv and per-group weight-grad GEMMs."""
+    rng = np.random.default_rng(300 + seed)
+    c = k = 8
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, c)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, c // groups, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    kw = dict(stride=stride, padding="SAME", groups=groups, relu=relu,
+              pool=pool)
+    out = ops.conv2d(x, w, b, **kw)
+    probe = jnp.asarray(rng.normal(size=out.shape), jnp.float32)
+
+    def loss(x, w, b):
+        return jnp.sum(ops.conv2d(x, w, b, **kw) * probe)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    _fd_directional(loss, [x, w, b], grads, rng=rng)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.conv2d_epilogue_ref(x, w, b, **kw) * probe)
+
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for g, wgt in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wgt),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_conv_grad_tiled_path():
+    """Grouped gradients through the spatially-tiled kernel: the grouped
+    transposed conv streams through the same halo'd tiles."""
+    x, w, b = _f32(1, 12, 14, 8), _f32(3, 3, 2, 8), _f32(8)
+    kw = dict(stride=1, padding="SAME", groups=4, relu=True,
+              h_tile=6, w_tile=6)
+    probe = _f32(*ops.conv2d(x, w, b, **kw).shape)
+    grads = jax.grad(lambda x, w, b: jnp.sum(
+        ops.conv2d(x, w, b, **kw) * probe), (0, 1, 2))(x, w, b)
+    want = jax.grad(lambda x, w, b: jnp.sum(ref.conv2d_epilogue_ref(
+        x, w, b, stride=1, padding="SAME", groups=4, relu=True) * probe),
+        (0, 1, 2))(x, w, b)
+    for g, wgt in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wgt),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_conv_grad_odd_map_pool_floor():
     """Odd conv outputs: the fused 2×2 pool drops the trailing row/col
     (floor semantics) — their gradient must be exactly zero."""
@@ -150,39 +204,49 @@ def test_conv_grad_bias_none():
 
 
 BWD_CASES = [
-    (8, 8, 4, 4, 3, 1, "VALID"),
-    (9, 10, 4, 8, 3, 2, "SAME"),
-    (10, 7, 2, 4, 5, 2, "VALID"),
-    (6, 6, 4, 4, 3, 1, ((2, 1), (0, 2))),
-    (7, 7, 1, 4, 1, 1, "VALID"),
+    (8, 8, 4, 4, 1, 3, 1, "VALID"),
+    (9, 10, 4, 8, 1, 3, 2, "SAME"),
+    (10, 7, 2, 4, 1, 5, 2, "VALID"),
+    (6, 6, 4, 4, 1, 3, 1, ((2, 1), (0, 2))),
+    (7, 7, 1, 4, 1, 1, 1, "VALID"),
     # forward padding beyond the kernel extent: the transposed conv's
     # "full" padding goes negative and must slice, not pad
-    (8, 8, 4, 4, 3, 3, ((4, 4), (4, 4))),
+    (8, 8, 4, 4, 1, 3, 3, ((4, 4), (4, 4))),
+    # grouped: the transposed conv flips channels per group and the
+    # weight grad contracts within groups
+    (8, 8, 8, 8, 2, 3, 1, "SAME"),
+    (9, 10, 8, 16, 4, 3, 2, "SAME"),
+    (8, 8, 8, 8, 8, 3, 1, "VALID"),                 # depthwise
+    (10, 7, 6, 12, 3, 5, 2, "VALID"),
+    (8, 8, 4, 4, 4, 3, 3, ((4, 4), (4, 4))),        # depthwise + neg pad
 ]
 
 
-@pytest.mark.parametrize("h,w,c,k,kh,stride,padding", BWD_CASES)
-def test_bwd_oracles_and_kernels_match_vjp(h, w, c, k, kh, stride,
+@pytest.mark.parametrize("h,w,c,k,groups,kh,stride,padding", BWD_CASES)
+def test_bwd_oracles_and_kernels_match_vjp(h, w, c, k, groups, kh, stride,
                                            padding):
     x = _f32(2, h, w, c)
-    wgt = _f32(kh, kh, c, k)
+    wgt = _f32(kh, kh, c // groups, k)
     y, vjp = jax.vjp(
-        lambda x, w: ref.conv2d_ref(x, w, stride=stride, padding=padding),
+        lambda x, w: ref.conv2d_ref(x, w, stride=stride, padding=padding,
+                                    groups=groups),
         x, wgt)
     g = _f32(*y.shape)
     dx_t, dw_t = vjp(g)
     dx_o = ref.conv2d_input_grad_ref(g, wgt, x.shape, stride=stride,
-                                     padding=padding)
+                                     padding=padding, groups=groups)
     dw_o = ref.conv2d_weight_grad_ref(x, g, kh, kh, stride=stride,
-                                      padding=padding)
+                                      padding=padding, groups=groups)
     np.testing.assert_allclose(np.asarray(dx_o), np.asarray(dx_t),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(dw_o), np.asarray(dw_t),
                                rtol=1e-5, atol=1e-4)
     dx_k = conv2d_ws_input_grad(g, wgt, x.shape, stride=stride,
-                                padding=padding, interpret=True)
+                                padding=padding, groups=groups,
+                                interpret=True)
     dw_k = conv2d_ws_weight_grad(x, g, kh, kh, stride=stride,
-                                 padding=padding, interpret=True)
+                                 padding=padding, groups=groups,
+                                 interpret=True)
     np.testing.assert_allclose(np.asarray(dx_k), np.asarray(dx_t),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_t),
@@ -312,23 +376,26 @@ if HAVE_HYPOTHESIS:
             ["SAME", "VALID", ((1, 0), (0, 1)), ((0, 2), (1, 1))]))
         relu = draw(st.booleans())
         pool = draw(st.booleans())
+        groups = draw(st.sampled_from([1, 2, 4]))
         oh, ow = ref.conv_out_shape(h, w, kh, kh, stride, padding)
         if pool and (oh < 2 or ow < 2):
             pool = False
         seed = draw(st.integers(0, 2**31 - 1))
-        return h, w, kh, stride, padding, relu, pool, seed
+        return h, w, kh, stride, padding, relu, pool, groups, seed
 
     @given(grad_case())
     @settings(max_examples=12, deadline=None)
     def test_conv_grad_hypothesis_sweep(case):
-        """Random stride/padding/epilogue configs: kernel grads track the
-        differentiable oracle's."""
-        h, w, kh, stride, padding, relu, pool, seed = case
+        """Random stride/padding/epilogue/groups configs: kernel grads
+        track the differentiable oracle's."""
+        h, w, kh, stride, padding, relu, pool, groups, seed = case
         rng = np.random.default_rng(seed)
         x = jnp.asarray(rng.normal(size=(1, h, w, 4)), jnp.float32)
-        wgt = jnp.asarray(rng.normal(size=(kh, kh, 4, 4)), jnp.float32)
+        wgt = jnp.asarray(rng.normal(size=(kh, kh, 4 // groups, 4)),
+                          jnp.float32)
         b = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
-        kw = dict(stride=stride, padding=padding, relu=relu, pool=pool)
+        kw = dict(stride=stride, padding=padding, relu=relu, pool=pool,
+                  groups=groups)
         probe = jnp.asarray(
             rng.normal(size=ops.conv2d(x, wgt, b, **kw).shape), jnp.float32)
         grads = jax.grad(lambda x, w, b: jnp.sum(

@@ -52,7 +52,7 @@ def test_banking_invariance(banks):
 
 def test_divisibility_enforced():
     x, wgt = _f32(1, 8, 8, 6), _f32(3, 3, 6, 8)   # C=6 not divisible by 4
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="banking invariant"):
         conv2d_ws(x, wgt, interpret=True)
 
 
