@@ -20,7 +20,14 @@ DMA pricing (perfmodel.tile_traffic).
 Emits ``BENCH_network.json`` so the perf trajectory of the network executor
 is tracked across PRs: per-network images/s, layers/s, measured µs/batch,
 the model-predicted FPGA times (1 IP core and the 20-core full board),
-and per-plan tiling stats.
+and per-plan tiling stats.  A ``provenance`` block (jax version, device
+kind, git sha) pins each run to its toolchain, each network row carries
+``pipelined_layers`` (how many convs the planner routed to the explicit
+DMA pipeline, kernels/conv2d_ws_pipe), and a ``pipeline`` section prices
+every network both ways (kernel="sequential" vs "auto") with per-layer
+crossover rows — the model columns there are the cross-PR throughput
+signal; interpret-mode measurements of the pipelined kernel time Python
+DMA emulation, not overlap.
 
 ``--smoke`` (or run(smoke=True)) times LeNet plus the resnet residual
 graph with minimal iterations — the CI fast path.  The large-map row is
@@ -42,6 +49,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 
 import jax
@@ -54,6 +62,23 @@ from repro.core.convcore import ConvCoreConfig
 
 BATCH = 4
 OUT_PATH = os.environ.get("BENCH_NETWORK_JSON", "BENCH_network.json")
+
+
+def _provenance() -> dict:
+    """Pin the run to its toolchain so rows are comparable across PRs
+    (the existing top-level keys stay untouched; this is additive)."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    dev = jax.devices()[0]
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "git_sha": sha or "unknown"}
 
 
 def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
@@ -80,6 +105,9 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
     # (the depthwise arithmetic-intensity signal the model must show)
     grouped_layers = plan.grouped_layer_count()
     dma_bound = rep["dma_bound_board_layers"]
+    # kernel-variant split: how many conv layers the planner routed to
+    # the explicit DMA pipeline (conv2d_ws_pipe) in the measured program
+    pipelined_layers = rep["pipelined_layers"]
     images_s = batch / (us * 1e-6)
     layers_s = batch * n_layers / (us * 1e-6)
     emit(f"network/{plan.name}", us,
@@ -87,7 +115,8 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
          f"model_ms={rep['seconds']*1e3:.3f};"
          f"model_ms_20core={fb['seconds']*1e3:.3f};"
          f"tiled_layers={tiled_layers};halo_factor={halo_max:.3f};"
-         f"grouped_layers={grouped_layers};dma_bound_board={dma_bound}")
+         f"grouped_layers={grouped_layers};dma_bound_board={dma_bound};"
+         f"pipelined_layers={pipelined_layers}")
     return {
         "name": plan.name,
         "batch": batch,
@@ -104,7 +133,61 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
         "max_halo_read_factor": halo_max,
         "grouped_layers": grouped_layers,
         "dma_bound_board_layers": dma_bound,
+        "pipelined_layers": pipelined_layers,
     }
+
+
+def _bench_pipeline(plan: network.NetworkPlan, rng, batch: int = 2,
+                    iters: int = 1, measure: bool = True) -> dict:
+    """Sequential-vs-pipelined head-to-head for one network: the same
+    quantized program compiled with kernel="sequential" (every conv on
+    conv2d_ws) and kernel="auto" (the planner routes DMA-bound layers to
+    conv2d_ws_pipe), with the §5.2 model pricing both ways and per-layer
+    crossover rows for the layers the planner pipelined.  The model
+    columns are the cross-PR throughput signal; interpret-mode
+    measurements time Python DMA emulation, so on CPU they bound
+    correctness cost, not overlap (the docstring caveat above)."""
+    params = plan.init_params(rng)
+    x = jnp.asarray(
+        rng.normal(size=(batch, *plan.input_shape)), jnp.float32)
+    qnet = network.quantize_network(plan, params, x)
+    reports, measured = {}, {}
+    for kernel in ("sequential", "auto"):
+        cfg = ConvCoreConfig(backend="pallas", int8=True, kernel=kernel)
+        tps = network.program_tile_plans(plan, cfg)
+        reports[kernel] = plan.perf_report(tile_plans=tps)
+        if measure:
+            program = network.make_int8_program(qnet, cfg, tile_plans=tps)
+            measured[kernel] = time_fn(lambda p=program: p(x),
+                                       iters=iters, warmup=1)
+    seq, auto = reports["sequential"], reports["auto"]
+    speedup = seq["seconds"] / auto["seconds"] if auto["seconds"] else 1.0
+    layer_rows = [
+        {"name": r["name"], "pipelined": r["pipelined"],
+         "cycles_sequential": r["cycles_sequential"],
+         "cycles_pipelined": r["cycles_pipelined"],
+         "speedup": r["pipeline_speedup"],
+         "dma_bound_board": r["dma_bound_board"]}
+        for r in auto["layers"] if r.get("pipelined") is not None]
+    emit(f"pipeline/{plan.name}", measured.get("auto", 0.0),
+         f"pipelined_layers={auto['pipelined_layers']};"
+         f"model_speedup={speedup:.3f};"
+         f"model_ms_seq={seq['seconds']*1e3:.3f};"
+         f"model_ms_auto={auto['seconds']*1e3:.3f}")
+    row = {
+        "name": plan.name,
+        "pipelined_layers": auto["pipelined_layers"],
+        "model_seconds_sequential": seq["seconds"],
+        "model_seconds_auto": auto["seconds"],
+        "model_speedup": speedup,
+        "model_gops_sequential": seq["gops_paper"],
+        "model_gops_auto": auto["gops_paper"],
+        "layers": layer_rows,
+    }
+    if measure:
+        row["measured_us_sequential"] = measured["sequential"]
+        row["measured_us_auto"] = measured["auto"]
+    return row
 
 
 def _bench_train(plan: network.NetworkPlan, rng, batch: int = BATCH,
@@ -160,6 +243,9 @@ def run(smoke: bool = False, train: bool = False):
                     warmup=1)
         _bench_plan(network.mobilenet_small(), rng, batch=2, iters=1,
                     warmup=1)
+        # sequential-vs-pipelined compile path (model columns + one
+        # measured pass each way)
+        _bench_pipeline(network.mobilenet_small(), rng)
         if train:
             _bench_train(network.lenet(input_shape=(12, 12, 1)), rng,
                          batch=2, iters=1, warmup=1)
@@ -177,7 +263,16 @@ def run(smoke: bool = False, train: bool = False):
                            iters=1, warmup=0)]
     payload = {"backend": jax.default_backend(),
                "interpret": jax.default_backend() != "tpu",
+               "provenance": _provenance(),
                "networks": results}
+    # sequential-vs-pipelined head-to-head: measured on the DMA-bound
+    # MobileNet family, model-only for the big tiled map (interpret-mode
+    # timing of large_map is already minutes per run)
+    payload["pipeline"] = [
+        _bench_pipeline(network.mobilenet_small(), rng),
+        _bench_pipeline(network.mobilenet_v2ish(), rng),
+        _bench_pipeline(network.large_map(), rng, measure=False),
+    ]
     # train-step rows: the QAT trainer through the backward WS kernels.
     # Always part of the full run — the tracked JSON must not lose its
     # training trajectory just because a flag was omitted.

@@ -38,7 +38,7 @@ stride-2 / pooled layers.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional
 
 from repro.kernels.ref import (check_groups, conv_out_shape, grouped_banks,
@@ -145,9 +145,17 @@ class TilePlan:
     groups: int = 1                   # grouped conv: kout banks stay inside
                                       # group boundaries; image blocks are
                                       # the per-group C/groups slice
+    pipelined: bool = False           # run this layer on conv2d_ws_pipe
+                                      # (explicit ping-pong DMA) instead of
+                                      # the implicitly pipelined conv2d_ws
 
     @property
     def working_set_bytes(self) -> int:
+        # The ×2 below IS the ping-pong pair: Pallas's implicit pipeline
+        # double-buffers the DMA'd blocks, and conv2d_ws_pipe materializes
+        # the same two slots as explicit VMEM scratch — so the working set
+        # is identical for both kernel variants and ``pipelined`` never
+        # changes whether a plan fits.
         return (2 * (self.image_block_bytes + self.weight_block_bytes
                      + self.output_block_bytes) + self.acc_block_bytes)
 
@@ -187,7 +195,8 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
                groups: int = 1, in_bytes: int = 1, acc_bytes: int = 4,
                out_bytes: Optional[int] = None,
                cin_banks: int = 4, kout_banks: int = 4,
-               vmem_budget: Optional[int] = VMEM_BYTES) -> TilePlan:
+               vmem_budget: Optional[int] = VMEM_BYTES,
+               kernel: str = "auto") -> TilePlan:
     """Jointly choose (h_tile, w_tile, cin_banks, kout_banks) so the true
     per-grid-step working set fits ``vmem_budget``.
 
@@ -207,7 +216,19 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
     intensity sits on the DMA roofline (perfmodel prices it).
 
     ``out_bytes`` is the epilogue output element size (1 when the fused
-    requantize writes int8; defaults to ``acc_bytes``)."""
+    requantize writes int8; defaults to ``acc_bytes``).
+
+    ``kernel`` selects the conv kernel variant the plan will run on:
+    ``"sequential"`` (conv2d_ws), ``"pipelined"`` (conv2d_ws_pipe, the
+    explicit ping-pong DMA kernel), or ``"auto"`` — consult
+    ``perfmodel.pipeline_estimate`` and set ``TilePlan.pipelined`` only
+    where the overlap model says it wins (tiny layers lose to the
+    per-slab protocol overhead and stay sequential).  The choice never
+    affects VMEM fitting: both variants hold the same two buffered
+    copies of each block (see ``working_set_bytes``)."""
+    if kernel not in ("auto", "pipelined", "sequential"):
+        raise ValueError(f"kernel must be auto|pipelined|sequential, "
+                         f"got {kernel!r}")
     check_groups(c, k, groups)
     cgrp = c // groups
     assert cgrp % cin_banks == 0 and k % kout_banks == 0 \
@@ -243,10 +264,21 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
             stride=stride, out_h=oh, out_w=ow, pool=pool,
             in_bytes=in_bytes, budget=budget, groups=groups)
 
+    def choose_kernel(plan: TilePlan) -> TilePlan:
+        if kernel == "sequential":
+            return plan
+        if kernel == "pipelined":
+            return replace(plan, pipelined=True)
+        from repro.core import perfmodel
+        psums = perfmodel.psum_count(h, w, c, k, kh, kw, stride=stride,
+                                     padding=padding, groups=groups)
+        est = perfmodel.pipeline_estimate(plan, psums)
+        return replace(plan, pipelined=est["profitable"])
+
     state = (oh, ow, cin_banks, kout_banks)
     plan = build(*state)
     if vmem_budget is None:
-        return plan
+        return choose_kernel(plan)
     min_tile = 2 if pool else 1
     while not plan.fits_vmem:
         th, tw, cbn, kbn = state
@@ -265,10 +297,11 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
         candidates = [(p, m) for p, m in candidates
                       if p.working_set_bytes < plan.working_set_bytes]
         if not candidates:
-            return plan                # nothing shrinks further: best effort
+            # nothing shrinks further: best effort
+            return choose_kernel(plan)
         plan, state = min(candidates,
                           key=lambda pm: pm[0].working_set_bytes)
-    return plan
+    return choose_kernel(plan)
 
 
 def divisor_banks(dim: int, want: int) -> int:

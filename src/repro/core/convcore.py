@@ -117,7 +117,8 @@ class PallasBackend:
                           groups=groups, cin_banks=cin_banks,
                           kout_banks=kout_banks, h_tile=h_tile,
                           w_tile=w_tile, relu=relu, pool=pool, wrap8=wrap8,
-                          out_scale=out_scale)
+                          out_scale=out_scale,
+                          pipelined=plan.pipelined if plan else False)
 
     def matmul(self, x, w, bias=None):
         return ops.matmul_ws(x, w, bias)
@@ -154,6 +155,10 @@ class ConvCoreConfig:
     wrap8: bool = False           # bit-faithful 8-bit psum wrap (Fig. 6)
     auto_bank: bool = True        # fit spatial tiles + banks to VMEM
     vmem_budget: int = banking.VMEM_BYTES   # per-core VMEM target
+    kernel: str = "auto"          # conv variant per layer: "auto" lets the
+                                  # perfmodel crossover predictor choose
+                                  # conv2d_ws_pipe vs conv2d_ws;
+                                  # "pipelined"/"sequential" force one
 
 
 class ConvCore:
@@ -183,7 +188,8 @@ class ConvCore:
             h, w_, c, k, kh, kw, stride=stride, padding=padding, pool=pool,
             groups=groups, in_bytes=in_bytes, acc_bytes=4,
             out_bytes=out_bytes, cin_banks=cb_n, kout_banks=kb_n,
-            vmem_budget=cfg.vmem_budget if cfg.auto_bank else None)
+            vmem_budget=cfg.vmem_budget if cfg.auto_bank else None,
+            kernel=cfg.kernel)
 
     def apply_layer(self, x: jax.Array, w: jax.Array,
                     bias: Optional[jax.Array] = None,

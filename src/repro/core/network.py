@@ -409,13 +409,17 @@ class NetworkPlan:
 
     def tile_plans(self, cin_banks: int = 4, kout_banks: int = 4,
                    in_bytes: int = 1,
-                   vmem_budget: Optional[int] = banking.VMEM_BYTES
+                   vmem_budget: Optional[int] = banking.VMEM_BYTES,
+                   kernel: str = "auto"
                    ) -> List[Optional[banking.TilePlan]]:
         """Per-node spatial-tile × channel-bank plans (None for nodes
         without a conv).  int8-datapath sizes by default; the final
         parametric layer (no fused requantize) keeps a 4-byte epilogue
         output, every other conv writes int8.  ``vmem_budget=None``
-        disables fitting (whole-map tiles — the seed dataflow)."""
+        disables fitting (whole-map tiles — the seed dataflow).
+        ``kernel`` picks the conv variant per layer ("auto" → the
+        perfmodel crossover predictor sets ``TilePlan.pipelined`` where
+        the explicit DMA pipeline wins; see banking.plan_tiles)."""
         param_kinds = ("conv", "dense")
         last_param = max((i for i, sp in enumerate(self.layers)
                           if sp.kind in param_kinds), default=-1)
@@ -437,7 +441,7 @@ class NetworkPlan:
                 in_bytes=in_bytes,
                 out_bytes=4 if i == last_param else in_bytes,
                 cin_banks=cb_n, kout_banks=kb_n,
-                vmem_budget=vmem_budget))
+                vmem_budget=vmem_budget, kernel=kernel))
         return plans
 
     def conv_geometries(self) -> List[Optional[Tuple[int, int]]]:
@@ -570,7 +574,8 @@ def program_tile_plans(plan: NetworkPlan, core_config) -> List:
         cin_banks=core_config.cin_banks,
         kout_banks=core_config.kout_banks, in_bytes=1,
         vmem_budget=(core_config.vmem_budget if core_config.auto_bank
-                     else None))
+                     else None),
+        kernel=getattr(core_config, "kernel", "auto"))
 
 
 @dataclass(frozen=True)

@@ -119,6 +119,53 @@ def dma_cycles(total_bytes: int, cfg: IPCoreConfig = IPCoreConfig()) -> int:
     return math.ceil(total_bytes / max(cfg.dma_bytes_per_cycle, 1e-9))
 
 
+# Per-slab cost of the explicit ping-pong protocol (descriptor setup,
+# semaphore wait, buffer swap) — the reason tiny layers stay sequential:
+# when the overlappable work per slab is smaller than the per-slab
+# bookkeeping, the steady-state overlap never amortizes it.
+PIPELINE_OVERHEAD_CYCLES = 16
+
+
+def pipeline_slabs(plan) -> int:
+    """Number of (spatial tile × kout bank × cin bank) slabs one layer
+    pass streams through the ping-pong buffers — the weight-stationary
+    sweep order of both conv kernels."""
+    return plan.n_tiles * plan.kout_banks * plan.cin_banks
+
+
+def pipeline_estimate(plan, psums: int,
+                      cfg: IPCoreConfig = IPCoreConfig()) -> dict:
+    """Sequential-vs-pipelined cost of one layer pass under ``plan``.
+
+    * sequential (``conv2d_ws`` without overlap credit):
+      every slab pays its DMA then its compute →  Σ(dma + compute) = D + C;
+    * pipelined (``conv2d_ws_pipe`` ping-pong): the first slab's load
+      fills the pipe, steady state hides the cheaper phase behind the
+      costlier one, the last slab's compute drains →
+      fill + (n−1)·max(d, c) + drain, plus per-slab protocol overhead,
+
+    with d = ⌈D/n⌉, c = ⌈C/n⌉ the per-slab shares.  Priced entirely on
+    the §5.2 cycle model (``cycles``) and the ``tile_traffic`` /
+    ``dma_cycles`` machinery — the paper anchors are untouched.  The
+    ``profitable`` verdict is what ``banking.plan_tiles(kernel="auto")``
+    uses to set ``TilePlan.pipelined`` per layer."""
+    n = max(pipeline_slabs(plan), 1)
+    dma = dma_cycles(tile_traffic(plan)["total_bytes"], cfg)
+    compute = cycles(psums, cfg) if psums else 0
+    d, c = -(-dma // n), -(-compute // n)
+    sequential = dma + compute
+    pipelined = d + (n - 1) * max(d, c) + c + n * PIPELINE_OVERHEAD_CYCLES
+    return {
+        "n_slabs": n,
+        "dma_cycles": dma,
+        "compute_cycles": compute,
+        "sequential_cycles": sequential,
+        "pipelined_cycles": pipelined,
+        "speedup": sequential / pipelined if pipelined else 1.0,
+        "profitable": pipelined < sequential,
+    }
+
+
 def network_report(layers: Sequence[Tuple[str, int]],
                    cfg: IPCoreConfig = IPCoreConfig(),
                    full_board_cores: int = 20,
@@ -129,9 +176,13 @@ def network_report(layers: Sequence[Tuple[str, int]],
 
     ``tile_plans`` (one ``banking.TilePlan`` or None per layer, e.g. from
     ``NetworkPlan.tile_plans``) adds the spatial-tiling DMA cost: each
-    layer's cycles become max(compute, DMA) — the M4 load/compute
-    pipeline overlaps the two — with tile revisits and halo re-reads
-    priced by ``tile_traffic``.  The DMA interface is SHARED across
+    layer is priced by ``pipeline_estimate`` for the kernel variant its
+    plan carries (``TilePlan.pipelined``) — sequential pays DMA + compute
+    per slab, pipelined overlaps them through the ping-pong buffers —
+    with tile revisits and halo re-reads priced by ``tile_traffic``.
+    Priced rows carry both variants (``cycles_sequential`` /
+    ``cycles_pipelined`` / ``pipeline_speedup``) so the crossover is
+    auditable per layer.  The DMA interface is SHARED across
     replicated IP cores, so full-board cycles floor at the same DMA time:
     that is what keeps the 20-core GOPS honest on large maps.  Each
     priced row carries ``dma_bound`` / ``dma_bound_board`` flags — on
@@ -151,14 +202,25 @@ def network_report(layers: Sequence[Tuple[str, int]],
         if tp is not None:
             traffic = tile_traffic(tp)
             dma = dma_cycles(traffic["total_bytes"], cfg)
+            pipelined = bool(getattr(tp, "pipelined", False))
+            est = pipeline_estimate(tp, p, cfg)
+            est_board = pipeline_estimate(tp, p, board)
+            chosen = est["pipelined_cycles" if pipelined
+                         else "sequential_cycles"]
+            chosen_board = est_board["pipelined_cycles" if pipelined
+                                     else "sequential_cycles"]
             row.update(dma_bytes=traffic["total_bytes"], dma_cycles=dma,
                        halo_read_factor=traffic["halo_read_factor"],
                        n_tiles=tp.n_tiles,
-                       cycles=max(compute, dma) if p else dma,
+                       cycles=chosen if p else dma,
+                       pipelined=pipelined,
+                       cycles_sequential=est["sequential_cycles"],
+                       cycles_pipelined=est["pipelined_cycles"],
+                       pipeline_speedup=est["speedup"],
                        dma_bound=dma >= compute,
                        dma_bound_board=dma >= compute_board)
             total += row["cycles"]
-            total_board += max(compute_board, dma) if p else dma
+            total_board += chosen_board if p else dma
         else:
             total += compute
             total_board += compute_board
@@ -170,6 +232,9 @@ def network_report(layers: Sequence[Tuple[str, int]],
         # full board — the depthwise/grouped arithmetic-intensity story
         "dma_bound_board_layers": sum(
             1 for r in per_layer if r.get("dma_bound_board")),
+        # how many priced layers the planner routed to conv2d_ws_pipe
+        "pipelined_layers": sum(
+            1 for r in per_layer if r.get("pipelined")),
         "psums": total_psums,
         "cycles": total,
         "seconds": total / cfg.clock_hz,

@@ -67,6 +67,7 @@ ops.conv2d (wrap8=True) on top of the int32 result.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,116 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import (check_groups, conv_out_shape, halo_window,
                                normalize_padding)
+
+
+class ConvGeom(NamedTuple):
+    """Resolved static geometry of one conv layer pass — the single
+    host-side derivation (banking legality, halo math, tile extents,
+    zero-extension, epilogue dtypes) shared by the implicitly-pipelined
+    kernel (``conv2d_ws``) and the manual-DMA double-buffered variant
+    (``conv2d_ws_pipe``), so the two dataflows can never disagree on
+    shapes — the precondition for their bit-exactness contract."""
+    n: int
+    kh: int
+    kw: int
+    k: int
+    stride: int
+    cin_banks: int
+    kout_banks: int
+    cb: int                   # channels per cin bank (within one group)
+    kb: int                   # kernels per kout bank
+    cgrp: int                 # channels per group (C // groups)
+    bpg: int                  # kout banks per group
+    th: int                   # conv-output tile extents (pre-pool)
+    tw: int
+    n_th: int
+    n_tw: int
+    in_th: int                # halo'd input window extents
+    in_tw: int
+    hp: int                   # padded (+zero-extended) map extents
+    wp: int
+    pth: int                  # epilogue output tile extents (post-pool)
+    ptw: int
+    poh: int                  # whole-map epilogue output extents
+    pow_: int
+    tiled: bool
+    int_path: bool
+    requant: bool
+
+
+def setup_conv(x, w, *, stride: int = 1, padding="VALID", groups: int = 1,
+               cin_banks: int = 4, kout_banks: int = 4, h_tile: int = 0,
+               w_tile: int = 0, pool: bool = False, requant: bool = False):
+    """Validate one conv layer pass and materialize its padded input.
+
+    Returns ``(x_padded, geom)`` where ``x_padded`` carries the zero
+    margins (padding + trailing-tile zero-extension — exact for the
+    symmetric zero-point-0 int8 scheme) and ``geom`` is the resolved
+    :class:`ConvGeom`.  Raises exactly the errors the kernels contract
+    with the planner (banking invariant, group boundaries, sub-2×2
+    pooled outputs, pool-aligned tiles)."""
+    n, h, w_dim, c = x.shape
+    kh, kw, c2, k = w.shape
+    check_groups(c, k, groups)
+    cgrp = c // groups
+    assert cgrp == c2, ("weights carry the per-group channel slice: "
+                        "w.shape[2] must be C/groups", c, groups, c2)
+    if groups > 1 and kout_banks % groups:
+        raise ValueError(
+            f"grouped conv needs kout banks that split along group "
+            f"boundaries: kout_banks={kout_banks} is not a multiple "
+            f"of groups={groups} (C={c}, K={k})")
+    if cgrp % cin_banks or k % kout_banks:
+        raise ValueError(
+            f"paper banking invariant (§4.1): C/groups={cgrp} and K={k} "
+            f"must divide by the bank counts ({cin_banks}, {kout_banks})")
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
+                                            h, w_dim)
+    oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
+    if pool:
+        if oh < 2 or ow < 2:
+            # same error as banking.plan_tiles — planner and kernel agree
+            raise ValueError(
+                f"2×2 pool needs a ≥2×2 conv output, got {oh}×{ow}")
+        oh, ow = (oh // 2) * 2, (ow // 2) * 2     # floor semantics
+    th = oh if h_tile in (0, None) else min(h_tile, oh)
+    tw = ow if w_tile in (0, None) else min(w_tile, ow)
+    if pool:
+        assert th % 2 == 0 and tw % 2 == 0, (
+            "pool-aligned tiles required: 2×2 windows must not straddle "
+            "tile edges", th, tw)
+    n_th, n_tw = -(-oh // th), -(-ow // tw)
+    tiled = (th, tw) != (oh, ow)
+    # halo'd input window per tile: (tile-1)·s + k, overlapping by k − s
+    in_th = halo_window(th, stride, kh)
+    in_tw = halo_window(tw, stride, kw)
+    hp, wp = h + pt + pb, w_dim + pl_ + pr
+    # extend the padded map so the LAST tile's window is in bounds; the
+    # matching garbage output rows/cols are sliced off after the kernel
+    extra_h = max(0, (n_th - 1) * th * stride + in_th - hp)
+    extra_w = max(0, (n_tw - 1) * tw * stride + in_tw - wp)
+    if pt or pb or pl_ or pr or extra_h or extra_w:
+        # zero margins written into the image BRAMs (exact for zero-point-0)
+        x = jnp.pad(x, ((0, 0), (pt, pb + extra_h), (pl_, pr + extra_w),
+                        (0, 0)))
+    hp, wp = hp + extra_h, wp + extra_w
+    if pool:
+        pth, ptw = th // 2, tw // 2
+        poh, pow_ = oh // 2, ow // 2
+    else:
+        pth, ptw = th, tw
+        poh, pow_ = oh, ow
+    # per-bank blocks live inside ONE group: the cin sweep covers only the
+    # C/groups channels a kout bank's kernel set reads (dense: the whole C)
+    geom = ConvGeom(
+        n=n, kh=kh, kw=kw, k=k, stride=stride,
+        cin_banks=cin_banks, kout_banks=kout_banks,
+        cb=cgrp // cin_banks, kb=k // kout_banks, cgrp=cgrp,
+        bpg=kout_banks // groups,
+        th=th, tw=tw, n_th=n_th, n_tw=n_tw, in_th=in_th, in_tw=in_tw,
+        hp=hp, wp=wp, pth=pth, ptw=ptw, poh=poh, pow_=pow_,
+        tiled=tiled, int_path=x.dtype == jnp.int8, requant=requant)
+    return x, geom
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
@@ -169,64 +280,17 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
     ``ref.grouped_banks`` degrades the defaults legally for grouped
     layers).
     """
-    n, h, w_dim, c = x.shape
-    kh, kw, c2, k = w.shape
-    check_groups(c, k, groups)
-    cgrp = c // groups
-    assert cgrp == c2, ("weights carry the per-group channel slice: "
-                        "w.shape[2] must be C/groups", c, groups, c2)
-    if groups > 1 and kout_banks % groups:
-        raise ValueError(
-            f"grouped conv needs kout banks that split along group "
-            f"boundaries: kout_banks={kout_banks} is not a multiple "
-            f"of groups={groups} (C={c}, K={k})")
-    if cgrp % cin_banks or k % kout_banks:
-        raise ValueError(
-            f"paper banking invariant (§4.1): C/groups={cgrp} and K={k} "
-            f"must divide by the bank counts ({cin_banks}, {kout_banks})")
-    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
-                                            h, w_dim)
-    oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
-    if pool:
-        if oh < 2 or ow < 2:
-            # same error as banking.plan_tiles — planner and kernel agree
-            raise ValueError(
-                f"2×2 pool needs a ≥2×2 conv output, got {oh}×{ow}")
-        oh, ow = (oh // 2) * 2, (ow // 2) * 2     # floor semantics
-    th = oh if h_tile in (0, None) else min(h_tile, oh)
-    tw = ow if w_tile in (0, None) else min(w_tile, ow)
-    if pool:
-        assert th % 2 == 0 and tw % 2 == 0, (
-            "pool-aligned tiles required: 2×2 windows must not straddle "
-            "tile edges", th, tw)
-    n_th, n_tw = -(-oh // th), -(-ow // tw)
-    tiled = (th, tw) != (oh, ow)
-    # halo'd input window per tile: (tile-1)·s + k, overlapping by k − s
-    in_th = halo_window(th, stride, kh)
-    in_tw = halo_window(tw, stride, kw)
-    hp, wp = h + pt + pb, w_dim + pl_ + pr
-    # extend the padded map so the LAST tile's window is in bounds; the
-    # matching garbage output rows/cols are sliced off below
-    extra_h = max(0, (n_th - 1) * th * stride + in_th - hp)
-    extra_w = max(0, (n_tw - 1) * tw * stride + in_tw - wp)
-    if pt or pb or pl_ or pr or extra_h or extra_w:
-        # zero margins written into the image BRAMs (exact for zero-point-0)
-        x = jnp.pad(x, ((0, 0), (pt, pb + extra_h), (pl_, pr + extra_w),
-                        (0, 0)))
-    hp, wp = hp + extra_h, wp + extra_w
-    if pool:
-        pth, ptw = th // 2, tw // 2
-        poh, pow_ = oh // 2, ow // 2
-    else:
-        pth, ptw = th, tw
-        poh, pow_ = oh, ow
-    # per-bank blocks live inside ONE group: the cin sweep covers only the
-    # C/groups channels a kout bank's kernel set reads (dense: the whole C)
-    cb, kb = cgrp // cin_banks, k // kout_banks
-    bpg = kout_banks // groups           # kout banks per group
+    x, g = setup_conv(x, w, stride=stride, padding=padding, groups=groups,
+                      cin_banks=cin_banks, kout_banks=kout_banks,
+                      h_tile=h_tile, w_tile=w_tile, pool=pool,
+                      requant=out_scale is not None)
+    n, kh, kw, k = g.n, g.kh, g.kw, g.k
+    th, tw, n_th, n_tw = g.th, g.tw, g.n_th, g.n_tw
+    in_th, in_tw, hp, wp = g.in_th, g.in_tw, g.hp, g.wp
+    pth, ptw, poh, pow_ = g.pth, g.ptw, g.poh, g.pow_
+    cb, kb, cgrp, bpg, tiled = g.cb, g.kb, g.cgrp, g.bpg, g.tiled
 
-    int_path = x.dtype == jnp.int8
-    acc_dtype = jnp.int32 if int_path else jnp.float32
+    acc_dtype = jnp.int32 if g.int_path else jnp.float32
     if bias is None:
         bias = jnp.zeros((k,), acc_dtype)
     bias = bias.astype(acc_dtype)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.kernels import conv2d_ws as _conv_mod
 from repro.kernels import conv2d_ws_bwd as _bwd_mod
+from repro.kernels import conv2d_ws_pipe as _pipe_mod
 from repro.kernels import matmul_ws as _mm_mod
 from repro.kernels import ref as _ref
 
@@ -98,18 +99,24 @@ class _ConvCfg(NamedTuple):
     w_tile: int
     relu: bool
     pool: bool
+    pipelined: bool = False
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _conv2d_float(cfg: _ConvCfg, x, w, bias):
     """Float-accumulator conv with the fused ReLU → 2×2-max-pool epilogue
-    and a paper-dataflow backward (see _conv2d_float_bwd)."""
-    return _conv_mod.conv2d_ws(x, w, bias, None, stride=cfg.stride,
-                               padding=cfg.padding, groups=cfg.groups,
-                               cin_banks=cfg.cin_banks,
-                               kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
-                               w_tile=cfg.w_tile, relu=cfg.relu,
-                               pool=cfg.pool, interpret=_interpret())
+    and a paper-dataflow backward (see _conv2d_float_bwd).  The primal
+    honors ``cfg.pipelined`` (both kernel variants are bit-exact, so the
+    VJP rules below may keep the sequential kernel for the residual
+    recompute without any value drift)."""
+    fwd = (_pipe_mod.conv2d_ws_pipe if cfg.pipelined
+           else _conv_mod.conv2d_ws)
+    return fwd(x, w, bias, None, stride=cfg.stride,
+               padding=cfg.padding, groups=cfg.groups,
+               cin_banks=cfg.cin_banks,
+               kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
+               w_tile=cfg.w_tile, relu=cfg.relu,
+               pool=cfg.pool, interpret=_interpret())
 
 
 def _conv2d_float_fwd(cfg: _ConvCfg, x, w, bias):
@@ -171,7 +178,8 @@ _conv2d_float.defvjp(_conv2d_float_fwd, _conv2d_float_bwd)
 def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
            groups: int = 1, cin_banks: int = 4, kout_banks: int = 4,
            h_tile: int = 0, w_tile: int = 0, relu: bool = False,
-           pool: bool = False, wrap8: bool = False, out_scale=None):
+           pool: bool = False, wrap8: bool = False, out_scale=None,
+           pipelined: bool = False):
     """Paper-dataflow convolution (arbitrary stride / SAME|VALID|explicit
     padding, fused ReLU → 2×2 max-pool → requantize epilogue, halo-aware
     spatial tiling via h_tile/w_tile — 0 = whole map).
@@ -201,6 +209,12 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     (an int8 forward has no meaningful int8 gradient; QAT trains the
     float shadow with straight-through fake quantization instead —
     core/training.py).
+
+    ``pipelined=True`` routes the layer through ``conv2d_ws_pipe`` (the
+    explicit double-buffered manual-DMA kernel) instead of ``conv2d_ws``
+    — bit-exact on every path, so this is purely a performance choice;
+    ``banking.plan_tiles(kernel="auto")`` makes it per layer and the
+    backends forward ``TilePlan.pipelined`` here.
     """
     if wrap8 and out_scale is not None:
         raise ValueError("wrap8 and out_scale are mutually exclusive: the "
@@ -217,13 +231,15 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
                                      stride, x.shape[1], x.shape[2])
         cfg = _ConvCfg(stride=stride, padding=pad, groups=groups,
                        cin_banks=cin_banks, kout_banks=kout_banks,
-                       h_tile=h_tile, w_tile=w_tile, relu=relu, pool=pool)
+                       h_tile=h_tile, w_tile=w_tile, relu=relu, pool=pool,
+                       pipelined=pipelined)
         return _conv2d_float(cfg, x, w, bias)
-    out = _conv_mod.conv2d_ws(x, w, bias, out_scale, stride=stride,
-                              padding=padding, groups=groups,
-                              cin_banks=cin_banks, kout_banks=kout_banks,
-                              h_tile=h_tile, w_tile=w_tile, relu=relu,
-                              pool=pool, interpret=_interpret())
+    fwd = (_pipe_mod.conv2d_ws_pipe if pipelined else _conv_mod.conv2d_ws)
+    out = fwd(x, w, bias, out_scale, stride=stride,
+              padding=padding, groups=groups,
+              cin_banks=cin_banks, kout_banks=kout_banks,
+              h_tile=h_tile, w_tile=w_tile, relu=relu,
+              pool=pool, interpret=_interpret())
     if x.dtype == jnp.int8 and wrap8:
         return out.astype(jnp.int8)
     return out
