@@ -9,8 +9,40 @@ import time
 import jax
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall-time per call in microseconds (blocks on results)."""
+class Timing(float):
+    """Median wall-time per call in microseconds, carrying the full stats
+    record the calibration fitter needs: ``min`` / ``median`` / ``iqr``
+    and the raw sample list.  A float subclass, so every existing
+    ``time_fn`` call site keeps working unchanged while calibration code
+    reads ``.iqr_us`` to reject noisy samples."""
+
+    def __new__(cls, samples_us):
+        times = sorted(samples_us)
+        n = len(times)
+        if n == 0:
+            raise ValueError("Timing needs at least one sample")
+        # proper median: mean of the two middle elements when n is even
+        # (the old harness took the upper-middle one)
+        mid = n // 2
+        median = times[mid] if n % 2 else (times[mid - 1] + times[mid]) / 2.0
+        self = super().__new__(cls, median)
+        self.samples_us = tuple(times)
+        self.median_us = median
+        self.min_us = times[0]
+        q1 = times[max(0, (n - 1) // 4)]
+        q3 = times[min(n - 1, (3 * (n - 1) + 2) // 4)]
+        self.iqr_us = q3 - q1
+        return self
+
+    def stats(self) -> dict:
+        return {"median_us": self.median_us, "min_us": self.min_us,
+                "iqr_us": self.iqr_us, "samples_us": list(self.samples_us)}
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> Timing:
+    """Median wall-time per call in microseconds (blocks on results).
+    Returns a :class:`Timing` — a float (the median) that also carries
+    min / IQR / the sample list for calibration-grade noise rejection."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -18,8 +50,7 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+    return Timing(times)
 
 
 def emit(name: str, us: float, derived: str = ""):

@@ -13,9 +13,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+import os
+
 from benchmarks.bench_util import emit, time_fn
 from repro.core import perfmodel
 from repro.core.banking import plan_banks, plan_tiles
+from repro.core.calibration import load_table
 from repro.kernels import ref
 from repro.kernels.conv2d_ws import conv2d_ws
 from repro.kernels.conv2d_ws_pipe import conv2d_ws_pipe
@@ -68,6 +71,11 @@ def run():
                                 groups=1, pad="SAME", h_tile=16,
                                 w_tile=16)),
     ]
+    # fitted table (benchmarks/calibrate.py): the head-to-head rows then
+    # carry the CALIBRATED verdict alongside the analytic one, so a
+    # crossover flip after calibration is visible right in the kernel rows
+    calib = load_table(os.environ.get("CALIBRATION_JSON",
+                                      "CALIBRATION.json"))
     for name, c_ in cases:
         cb, kb = ref.grouped_banks(c_["c"], c_["k"], c_["groups"])
         xi8 = jnp.asarray(
@@ -89,6 +97,12 @@ def run():
                  f"model_pipe_cycles={est['pipelined_cycles']};"
                  f"model_speedup={est['speedup']:.3f};"
                  f"predictor_pipelined={int(plan.pipelined)}")
+        if calib is not None:
+            cal = perfmodel.pipeline_estimate(plan, psums, calib=calib)
+            model += (f";calib_seq_cycles={cal['sequential_cycles']};"
+                      f"calib_pipe_cycles={cal['pipelined_cycles']};"
+                      f"calib_pipelined="
+                      f"{int(cal['pipelined_cycles'] < cal['sequential_cycles'])}")
         for variant, fn in (("seq", conv2d_ws), ("pipe", conv2d_ws_pipe)):
             us = time_fn(lambda fn=fn: fn(
                 xi8, wi8, padding=c_["pad"], groups=c_["groups"],

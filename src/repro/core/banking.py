@@ -196,7 +196,7 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
                out_bytes: Optional[int] = None,
                cin_banks: int = 4, kout_banks: int = 4,
                vmem_budget: Optional[int] = VMEM_BYTES,
-               kernel: str = "auto") -> TilePlan:
+               kernel: str = "auto", calib=None) -> TilePlan:
     """Jointly choose (h_tile, w_tile, cin_banks, kout_banks) so the true
     per-grid-step working set fits ``vmem_budget``.
 
@@ -225,7 +225,14 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
     where the overlap model says it wins (tiny layers lose to the
     per-slab protocol overhead and stay sequential).  The choice never
     affects VMEM fitting: both variants hold the same two buffered
-    copies of each block (see ``working_set_bytes``)."""
+    copies of each block (see ``working_set_bytes``).
+
+    ``calib`` (a ``core.calibration.CalibrationTable``) makes the
+    ``kernel="auto"`` crossover consult the MEASUREMENT-calibrated model
+    instead of the analytic one; the tile/bank descent itself is VMEM
+    geometry and does not depend on it.  ``core/autotune.py`` supersedes
+    this greedy descent with a full search of the candidate space — this
+    function remains the fallback when no tuner/table is present."""
     if kernel not in ("auto", "pipelined", "sequential"):
         raise ValueError(f"kernel must be auto|pipelined|sequential, "
                          f"got {kernel!r}")
@@ -272,7 +279,7 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
         from repro.core import perfmodel
         psums = perfmodel.psum_count(h, w, c, k, kh, kw, stride=stride,
                                      padding=padding, groups=groups)
-        est = perfmodel.pipeline_estimate(plan, psums)
+        est = perfmodel.pipeline_estimate(plan, psums, calib=calib)
         return replace(plan, pipelined=est["profitable"])
 
     state = (oh, ow, cin_banks, kout_banks)

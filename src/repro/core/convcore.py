@@ -159,6 +159,9 @@ class ConvCoreConfig:
                                   # perfmodel crossover predictor choose
                                   # conv2d_ws_pipe vs conv2d_ws;
                                   # "pipelined"/"sequential" force one
+    calib: Optional[object] = None  # core.calibration.CalibrationTable:
+                                  # measured model terms for the planner's
+                                  # crossover; None → analytic §5.2 model
 
 
 class ConvCore:
@@ -189,7 +192,7 @@ class ConvCore:
             groups=groups, in_bytes=in_bytes, acc_bytes=4,
             out_bytes=out_bytes, cin_banks=cb_n, kout_banks=kb_n,
             vmem_budget=cfg.vmem_budget if cfg.auto_bank else None,
-            kernel=cfg.kernel)
+            kernel=cfg.kernel, calib=cfg.calib)
 
     def apply_layer(self, x: jax.Array, w: jax.Array,
                     bias: Optional[jax.Array] = None,

@@ -410,7 +410,7 @@ class NetworkPlan:
     def tile_plans(self, cin_banks: int = 4, kout_banks: int = 4,
                    in_bytes: int = 1,
                    vmem_budget: Optional[int] = banking.VMEM_BYTES,
-                   kernel: str = "auto"
+                   kernel: str = "auto", calib=None
                    ) -> List[Optional[banking.TilePlan]]:
         """Per-node spatial-tile × channel-bank plans (None for nodes
         without a conv).  int8-datapath sizes by default; the final
@@ -419,7 +419,10 @@ class NetworkPlan:
         disables fitting (whole-map tiles — the seed dataflow).
         ``kernel`` picks the conv variant per layer ("auto" → the
         perfmodel crossover predictor sets ``TilePlan.pipelined`` where
-        the explicit DMA pipeline wins; see banking.plan_tiles)."""
+        the explicit DMA pipeline wins; see banking.plan_tiles).
+        ``calib`` (a core.calibration.CalibrationTable) prices the
+        crossover under measured terms instead of the analytic defaults;
+        core/autotune.py searches the full plan space against it."""
         param_kinds = ("conv", "dense")
         last_param = max((i for i, sp in enumerate(self.layers)
                           if sp.kind in param_kinds), default=-1)
@@ -441,7 +444,7 @@ class NetworkPlan:
                 in_bytes=in_bytes,
                 out_bytes=4 if i == last_param else in_bytes,
                 cin_banks=cb_n, kout_banks=kb_n,
-                vmem_budget=vmem_budget, kernel=kernel))
+                vmem_budget=vmem_budget, kernel=kernel, calib=calib))
         return plans
 
     def conv_geometries(self) -> List[Optional[Tuple[int, int]]]:
@@ -471,19 +474,23 @@ class NetworkPlan:
 
     def perf_report(self, cfg: perfmodel.IPCoreConfig =
                     perfmodel.IPCoreConfig(),
-                    tile_plans: Optional[Sequence] = None) -> dict:
+                    tile_plans: Optional[Sequence] = None,
+                    calib=None) -> dict:
         """The §5.2 cycle model summed over the network, including the
         20-core full-board configuration (perfmodel.network_report).
         With ``tile_plans`` (e.g. from :meth:`tile_plans`) the model also
         prices tile revisits and halo re-reads against the DMA interface,
         keeping large-map GOPS honest.  DAG branches serialize on the
-        single core, so the sum over nodes is the schedule length."""
+        single core, so the sum over nodes is the schedule length.
+        ``calib`` applies a measured CalibrationTable to every term;
+        omitted, the report is bit-identical to the analytic model."""
         return perfmodel.network_report(self.psum_table(), cfg,
-                                        tile_plans=tile_plans)
+                                        tile_plans=tile_plans, calib=calib)
 
     def train_report(self, cfg: perfmodel.IPCoreConfig =
                      perfmodel.IPCoreConfig(),
-                     tile_plans: Optional[Sequence] = None) -> dict:
+                     tile_plans: Optional[Sequence] = None,
+                     calib=None) -> dict:
         """The §5.2 cycle model of one TRAINING step over this plan:
         forward + backward ≈ 3× the forward psums (input-gradient
         transposed conv + weight-gradient correlation each match the
@@ -495,7 +502,7 @@ class NetworkPlan:
                   for shp in self.param_shapes()]
         return perfmodel.train_report(self.psum_table(), cfg,
                                       weight_bytes=wbytes,
-                                      tile_plans=tile_plans)
+                                      tile_plans=tile_plans, calib=calib)
 
     # -- execution ----------------------------------------------------------
 
@@ -575,7 +582,8 @@ def program_tile_plans(plan: NetworkPlan, core_config) -> List:
         kout_banks=core_config.kout_banks, in_bytes=1,
         vmem_budget=(core_config.vmem_budget if core_config.auto_bank
                      else None),
-        kernel=getattr(core_config, "kernel", "auto"))
+        kernel=getattr(core_config, "kernel", "auto"),
+        calib=getattr(core_config, "calib", None))
 
 
 @dataclass(frozen=True)

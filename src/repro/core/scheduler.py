@@ -50,6 +50,14 @@ class SchedulerConfig:
     n_cores: int = 1
     mode: str = "batch"                 # "batch" | "kout" | "spatial"
 
+    @classmethod
+    def for_tune(cls, tune) -> "SchedulerConfig":
+        """Config matching an autotuned plan's (mode × cores) verdict —
+        accepts anything with ``scheduler_mode`` / ``n_cores`` attributes
+        (core/autotune.NetworkTunePlan), so autotune stays an optional
+        upper layer this module never imports."""
+        return cls(n_cores=int(tune.n_cores), mode=str(tune.scheduler_mode))
+
 
 class KoutShardedBackend:
     """Backend decorator: split every conv/matmul's output channels across
@@ -213,6 +221,13 @@ class MultiCoreScheduler:
     def __init__(self, config: SchedulerConfig = SchedulerConfig()):
         assert config.mode in ("batch", "kout", "spatial"), config.mode
         self.config = config
+
+    @classmethod
+    def from_tune(cls, tune) -> "MultiCoreScheduler":
+        """Scheduler for an autotuned network plan: the (scheduler mode ×
+        core count) the search priced cheapest under the calibrated
+        model (see core/autotune.autotune_network)."""
+        return cls(SchedulerConfig.for_tune(tune))
 
     def shard_backend(self, backend_name: str) -> Backend:
         """kout / spatial modes: a Backend whose every conv layer is
