@@ -1,8 +1,12 @@
 """Calibration sweep: time the REAL conv kernels over a factorial grid of
-(tile shape × cin/kout banks × groups × epilogue × pipelined) and fit the
-per-term corrections of ``core/calibration.CalibrationTable`` onto the
-§5.2 analytic model — the measured counterpart of the exemplar repo's
-``overhead_factor = 3.89``.
+(tile shape × cin/kout banks × groups × dilation/transpose × epilogue ×
+pipelined) and fit the per-term corrections of
+``core/calibration.CalibrationTable`` onto the §5.2 analytic model — the
+measured counterpart of the exemplar repo's ``overhead_factor = 3.89``.
+The dense-prediction grid points (PR 8) cover a dilated 3×3 and a
+stride-2 transposed conv (timed through the shared ``conv2d_ws_trans``
+eq-conv lowering, with the zero-skipping psum count as the analytic
+compute term).
 
 Each grid point runs ``conv2d_ws`` (sequential) or ``conv2d_ws_pipe``
 (explicit double-buffered DMA) with a concrete ``banking.TilePlan``; its
@@ -45,6 +49,8 @@ from repro.core.calibration import (NOISE_IQR_FRACTION, fit_calibration,
                                     sample_from_plan)
 from repro.kernels.conv2d_ws import conv2d_ws
 from repro.kernels.conv2d_ws_pipe import conv2d_ws_pipe
+from repro.kernels.conv2d_ws_trans import (conv2d_ws_transpose,
+                                           transpose_eq_conv_geometry)
 
 OUT_PATH = os.environ.get("CALIBRATION_JSON", "CALIBRATION.json")
 
@@ -70,20 +76,28 @@ def _provenance(smoke: bool) -> dict:
             "smoke": smoke}
 
 
-# factorial axes: (name, H, W, C, K, KH, groups, padding)
+# factorial axes: (name, H, W, C, K, KH, groups, padding, dilation, op)
 # × bank pairs × epilogues × {sequential, pipelined}.  The shapes span
 # the zoo's workload classes: dense 3×3, pointwise 1×1, grouped,
-# depthwise, and a spatially-tiled map (many slabs — the axis that
-# constrains the per-slab overhead term).
+# depthwise, a spatially-tiled map (many slabs — the axis that
+# constrains the per-slab overhead term), and the dense-prediction pair
+# (PR 8): a dilated (atrous) kernel with its widened halo, and a
+# stride-2 transposed-conv upsampler through the shared
+# ``conv2d_ws_trans`` eq-conv lowering.  ``op`` is "conv" (stride 1) or
+# "transpose" (stride-2 upsampling, the unet_small deconv shape class).
 _SHAPES = [
-    ("dense3x3",    16, 16, 16, 16, 3, 1,  "SAME"),
-    ("dense3x3big", 32, 32, 16, 16, 3, 1,  "SAME"),
-    ("pointwise",   16, 16, 32, 32, 1, 1,  "VALID"),
-    ("grouped",     16, 16, 32, 32, 3, 4,  "SAME"),
-    ("depthwise",   16, 16, 32, 32, 3, 32, "SAME"),
-    ("tiledmap",    64, 64, 16, 16, 3, 1,  "SAME"),
+    ("dense3x3",    16, 16, 16, 16, 3, 1,  "SAME",  1, "conv"),
+    ("dense3x3big", 32, 32, 16, 16, 3, 1,  "SAME",  1, "conv"),
+    ("pointwise",   16, 16, 32, 32, 1, 1,  "VALID", 1, "conv"),
+    ("grouped",     16, 16, 32, 32, 3, 4,  "SAME",  1, "conv"),
+    ("depthwise",   16, 16, 32, 32, 3, 32, "SAME",  1, "conv"),
+    ("tiledmap",    64, 64, 16, 16, 3, 1,  "SAME",  1, "conv"),
+    ("dilated2",    16, 16, 16, 16, 3, 1,  "SAME",  2, "conv"),
+    ("transpose2x",  8,  8, 16, 16, 2, 1,  "VALID", 1, "transpose"),
 ]
 _BANKS = [(4, 4), (8, 8)]
+# the stride the transposed shapes upsample by (the zoo's 2× deconv)
+_TRANSPOSE_STRIDE = 2
 # epilogue grid: bare, ReLU, ReLU+pool, fused requantize
 _EPILOGUES = [
     ("bare",    dict()),
@@ -92,7 +106,8 @@ _EPILOGUES = [
     ("requant", dict(out_scale=0.03125)),
 ]
 
-_SMOKE_SHAPES = [_SHAPES[0], _SHAPES[2], _SHAPES[4], _SHAPES[5]]
+_SMOKE_SHAPES = [_SHAPES[0], _SHAPES[2], _SHAPES[4], _SHAPES[5],
+                 _SHAPES[6], _SHAPES[7]]
 _SMOKE_EPILOGUES = [_EPILOGUES[1], _EPILOGUES[3]]
 
 
@@ -106,12 +121,23 @@ def sweep(smoke: bool = False, iters: int = 0) -> list:
     iters = iters or (2 if smoke else 5)
     rng = np.random.default_rng(7)
     samples = []
-    for name, h, w, c, k, kh, groups, pad in shapes:
+    for name, h, w, c, k, kh, groups, pad, dil, op in shapes:
         x = jnp.asarray(rng.integers(-128, 128, (1, h, w, c)), jnp.int8)
         wt = jnp.asarray(
             rng.integers(-128, 128, (kh, kh, c // groups, k)), jnp.int8)
-        psums = perfmodel.psum_count(h, w, c, k, kh, kh, padding=pad,
-                                     groups=groups)
+        if op == "transpose":
+            # zero-skipping MACs — the count the planner prices transposed
+            # rows with; the plan geometry is the eq stride-1 conv the
+            # lowering actually launches
+            psums = perfmodel.conv_transpose_psum_count(
+                h, w, c, k, kh, kh, stride=_TRANSPOSE_STRIDE, padding=pad,
+                groups=groups, dilation=dil)
+            ph, pw, ppad = transpose_eq_conv_geometry(
+                h, w, kh, kh, _TRANSPOSE_STRIDE, pad, dil)
+        else:
+            psums = perfmodel.psum_count(h, w, c, k, kh, kh, padding=pad,
+                                         groups=groups, dilation=dil)
+            ph, pw, ppad = h, w, pad
         # spatial tiles only where the shape calls for them: the tiled
         # map's tight budget forces plan_tiles into halo'd H/W tiles —
         # the many-slab axis that constrains the per-slab overhead term
@@ -125,7 +151,8 @@ def sweep(smoke: bool = False, iters: int = 0) -> list:
                         ("seq", conv2d_ws, False),
                         ("pipe", conv2d_ws_pipe, True)):
                     plan = plan_tiles(
-                        h, w, c, k, kh, kh, padding=pad, groups=groups,
+                        ph, pw, c, k, kh, kh, padding=ppad, groups=groups,
+                        dilation=dil,
                         pool=ep.get("pool", False), in_bytes=1,
                         out_bytes=1 if out_scale is not None else 4,
                         cin_banks=cb_n, kout_banks=kb_n,
@@ -135,6 +162,7 @@ def sweep(smoke: bool = False, iters: int = 0) -> list:
                     # so the analytic terms describe exactly what was
                     # measured
                     kw = dict(stride=1, padding=pad, groups=groups,
+                              dilation=dil,
                               cin_banks=plan.cin_banks,
                               kout_banks=plan.kout_banks,
                               h_tile=plan.h_tile if plan.tiled else 0,
@@ -143,6 +171,12 @@ def sweep(smoke: bool = False, iters: int = 0) -> list:
                               pool=ep.get("pool", False))
                     scale = (jnp.float32(out_scale)
                              if out_scale is not None else None)
+                    if op == "transpose":
+                        # both variants go through the shared lowering —
+                        # it dispatches the eq conv on ``pipelined``
+                        fn = conv2d_ws_transpose
+                        kw.update(stride=_TRANSPOSE_STRIDE,
+                                  pipelined=pipelined)
                     t = time_fn(
                         lambda fn=fn, kw=kw, scale=scale: fn(
                             x, wt, None, scale, interpret=interpret, **kw),

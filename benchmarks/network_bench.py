@@ -1,7 +1,16 @@
 """Whole-network benchmark: LeNet / VGG-small / ResNet-small / MobileNet /
-large-map int8 NetworkPlans through the Pallas backend (interpret on CPU —
-functional timing reference), with the §5.2 cycle model's whole-network
-prediction alongside the measurement.
+segmentation (unet_small, dilated_context) / large-map int8 NetworkPlans
+through the Pallas backend (interpret on CPU — functional timing
+reference), with the §5.2 cycle model's whole-network prediction alongside
+the measurement.
+
+The segmentation rows exercise the dense-prediction contract (PR 8):
+``unet_small`` compiles transposed-conv upsampling through the shared
+``conv2d_ws_trans`` eq-conv lowering (its model rows price psums with the
+zero-skipping MAC count, not the naive upsampled sweep) and
+``dilated_context`` runs dilated (atrous) kernels with their widened
+halos; both also land in ``measured_vs_predicted`` when a calibration
+table is loaded.
 
 The resnet row exercises the residual-graph (DAG) compiler: skip
 connections with shared-grid int8 merge adds and 1×1 projection
@@ -29,8 +38,9 @@ crossover rows — the model columns there are the cross-PR throughput
 signal; interpret-mode measurements of the pipelined kernel time Python
 DMA emulation, not overlap.
 
-``--smoke`` (or run(smoke=True)) times LeNet plus the resnet residual
-graph with minimal iterations — the CI fast path.  The large-map row is
+``--smoke`` (or run(smoke=True)) times LeNet, the resnet residual graph,
+the mobilenet grouped-conv compiler, and the two segmentation nets with
+minimal iterations — the CI fast path.  The large-map row is
 measured with iters=1/warmup=0 (interpret mode is slow), so treat its
 measured_us as indicative — the modelled FPGA times are the stable
 cross-PR signal.
@@ -74,6 +84,7 @@ from repro.core.calibration import load_table, sample_from_plan
 from repro.core.convcore import ConvCoreConfig
 from repro.kernels.conv2d_ws import conv2d_ws
 from repro.kernels.conv2d_ws_pipe import conv2d_ws_pipe
+from repro.kernels.conv2d_ws_trans import conv2d_ws_transpose
 
 BATCH = 4
 OUT_PATH = os.environ.get("BENCH_NETWORK_JSON", "BENCH_network.json")
@@ -237,13 +248,16 @@ def _bench_pipeline(plan: network.NetworkPlan, rng, batch: int = 2,
 
 def _measured_vs_predicted(plan: network.NetworkPlan, rng,
                            iters: int = 2) -> dict:
-    """Per-layer model-accuracy row for one network: time every conv
-    layer's actual kernel call (the variant + plan geometry the compiled
-    program runs) and compare against the calibrated model's predicted
-    wall time — mean |error| % across layers plus the worst layer, the
-    regression-tested number that says how much to trust the planner's
-    cost model.  Requires a loaded CalibrationTable: predictions and
-    measurements only share a scale through the fitted ``clock_hz``."""
+    """Per-layer model-accuracy row for one network: time every conv /
+    conv_transpose layer's actual kernel call (the variant + plan
+    geometry the compiled program runs — transposed layers go through the
+    shared ``conv2d_ws_trans`` lowering, so what's timed is the eq
+    stride-1 conv their TilePlan was planned on) and compare against the
+    calibrated model's predicted wall time — mean |error| % across layers
+    plus the worst layer, the regression-tested number that says how much
+    to trust the planner's cost model.  Requires a loaded
+    CalibrationTable: predictions and measurements only share a scale
+    through the fitted ``clock_hz``."""
     assert CALIB is not None
     interpret = jax.default_backend() != "tpu"
     cfg = ConvCoreConfig(backend="pallas", int8=True, calib=CALIB)
@@ -255,7 +269,7 @@ def _measured_vs_predicted(plan: network.NetworkPlan, rng,
     rows = []
     for i, sp in enumerate(plan.layers):
         tp = tile_plans[i]
-        if sp.kind != "conv" or tp is None:
+        if sp.kind not in ("conv", "conv_transpose") or tp is None:
             continue
         h, w, c = plan.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
         k, g_ = network.conv_geometry(sp, c)
@@ -263,15 +277,32 @@ def _measured_vs_predicted(plan: network.NetworkPlan, rng,
         x = jnp.asarray(rng.integers(-128, 128, (1, h, w, c)), jnp.int8)
         wt = jnp.asarray(
             rng.integers(-128, 128, (kh, kw_, c // g_, k)), jnp.int8)
-        fn = conv2d_ws_pipe if tp.pipelined else conv2d_ws
         scale = jnp.float32(0.03125)
-        t = time_fn(lambda: fn(
-            x, wt, None, scale, stride=sp.stride, padding=sp.padding,
-            groups=g_, cin_banks=tp.cin_banks, kout_banks=tp.kout_banks,
-            h_tile=tp.h_tile if tp.tiled else 0,
-            w_tile=tp.w_tile if tp.tiled else 0,
-            relu=sp.relu, pool=sp.pool, interpret=interpret),
-            iters=iters, warmup=1)
+        if sp.kind == "conv_transpose":
+            # the lowering re-legalizes banks and dispatches the eq conv
+            # (sequential or pipelined) off the plan verdict itself
+            def call(fn=conv2d_ws_transpose, tp=tp, sp=sp, x=x, wt=wt,
+                     g_=g_):
+                return fn(
+                    x, wt, None, scale, stride=sp.stride,
+                    padding=sp.padding, groups=g_, cin_banks=tp.cin_banks,
+                    kout_banks=tp.kout_banks,
+                    h_tile=tp.h_tile if tp.tiled else 0,
+                    w_tile=tp.w_tile if tp.tiled else 0,
+                    relu=sp.relu, pool=sp.pool, dilation=sp.dilation,
+                    pipelined=tp.pipelined, interpret=interpret)
+        else:
+            def call(fn=conv2d_ws_pipe if tp.pipelined else conv2d_ws,
+                     tp=tp, sp=sp, x=x, wt=wt, g_=g_):
+                return fn(
+                    x, wt, None, scale, stride=sp.stride,
+                    padding=sp.padding, groups=g_, cin_banks=tp.cin_banks,
+                    kout_banks=tp.kout_banks,
+                    h_tile=tp.h_tile if tp.tiled else 0,
+                    w_tile=tp.w_tile if tp.tiled else 0,
+                    relu=sp.relu, pool=sp.pool, dilation=sp.dilation,
+                    interpret=interpret)
+        t = time_fn(call, iters=iters, warmup=1)
         s = sample_from_plan(names[i], tp, psum_rows[names[i]],
                              t.median_us, t.iqr_us)
         pred = CALIB.predicted_us(s.compute_cycles, s.dma_bytes,
@@ -351,6 +382,12 @@ def run(smoke: bool = False, train: bool = False):
             _bench_plan(network.resnet_small(), rng, batch=2, iters=1,
                         warmup=1),
             _bench_plan(network.mobilenet_small(), rng, batch=2, iters=1,
+                        warmup=1),
+            # dense prediction: the transposed-conv (unet) and dilated
+            # (atrous-context) compilers ride the CI fast path too
+            _bench_plan(network.unet_small(), rng, batch=2, iters=1,
+                        warmup=1),
+            _bench_plan(network.dilated_context(), rng, batch=2, iters=1,
                         warmup=1)]
         # sequential-vs-pipelined compile path (model columns + one
         # measured pass each way)
@@ -359,6 +396,9 @@ def run(smoke: bool = False, train: bool = False):
         if CALIB is not None:
             mvp = [_measured_vs_predicted(network.lenet(), rng, iters=1),
                    _measured_vs_predicted(network.mobilenet_small(), rng,
+                                          iters=1),
+                   # exercises the conv_transpose timing branch
+                   _measured_vs_predicted(network.unet_small(), rng,
                                           iters=1)]
         if train:
             _bench_train(network.lenet(input_shape=(12, 12, 1)), rng,
@@ -385,6 +425,12 @@ def run(smoke: bool = False, train: bool = False):
                # grouped perfmodel rows (DMA-bound depthwise layers)
                _bench_plan(network.mobilenet_small(), rng),
                _bench_plan(network.mobilenet_v2ish(), rng),
+               # dense-prediction (segmentation) workloads: transposed-
+               # conv upsampling with skip concats (unet) and dilated
+               # context aggregation — the rows carry the zero-skipping
+               # transpose psum pricing
+               _bench_plan(network.unet_small(), rng),
+               _bench_plan(network.dilated_context(), rng),
                # the tiled-pipeline workload: exceeds whole-map VMEM
                _bench_plan(network.large_map(), rng, batch=2,
                            iters=1, warmup=0)]
@@ -408,6 +454,8 @@ def run(smoke: bool = False, train: bool = False):
             _measured_vs_predicted(network.resnet_small(), rng),
             _measured_vs_predicted(network.mobilenet_small(), rng),
             _measured_vs_predicted(network.mobilenet_v2ish(), rng),
+            _measured_vs_predicted(network.unet_small(), rng),
+            _measured_vs_predicted(network.dilated_context(), rng),
         ]
         payload["measured_vs_predicted_skipped"] = [
             {"name": "large_map",

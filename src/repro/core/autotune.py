@@ -126,12 +126,14 @@ def plan_cost(plan: TilePlan, psums: int,
 
 def autotune_layer(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
                    *, stride: int = 1, padding="VALID", pool: bool = False,
-                   groups: int = 1, in_bytes: int = 1, acc_bytes: int = 4,
+                   groups: int = 1, dilation: int = 1, in_bytes: int = 1,
+                   acc_bytes: int = 4,
                    out_bytes: Optional[int] = None,
                    cin_banks: int = 4, kout_banks: int = 4,
                    vmem_budget: Optional[int] = banking.VMEM_BYTES,
                    cfg: perfmodel.IPCoreConfig = perfmodel.IPCoreConfig(),
-                   calib=None, name: str = "conv") -> LayerTune:
+                   calib=None, name: str = "conv",
+                   psums: Optional[int] = None) -> LayerTune:
     """Exhaustive (TilePlan × kernel variant) search for one conv layer.
 
     Every candidate is built through ``banking.plan_tiles``'s own
@@ -141,28 +143,35 @@ def autotune_layer(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
     structural tie-break) wins, so the result is deterministic given a
     fixed CalibrationTable.  The greedy ``plan_tiles(kernel="auto")``
     plan for the same arguments is seeded into the candidate set: the
-    tuned plan can only ever match or beat it under the same model."""
+    tuned plan can only ever match or beat it under the same model.
+
+    ``psums`` overrides the compute price (transposed layers pass their
+    zero-skipping count — the eq stride-1 conv geometry this function
+    sees would otherwise price the ~stride²× naive sweep)."""
     check_groups(c, k, groups)
     cgrp = c // groups
     out_bytes_eff = acc_bytes if out_bytes is None else out_bytes
-    psums = perfmodel.psum_count(h, w, c, k, kh, kw, stride=stride,
-                                 padding=padding, groups=groups)
+    if psums is None:
+        psums = perfmodel.psum_count(h, w, c, k, kh, kw, stride=stride,
+                                     padding=padding, groups=groups,
+                                     dilation=dilation)
     greedy = banking.plan_tiles(
         h, w, c, k, kh, kw, stride=stride, padding=padding, pool=pool,
-        groups=groups, in_bytes=in_bytes, acc_bytes=acc_bytes,
+        groups=groups, dilation=dilation, in_bytes=in_bytes,
+        acc_bytes=acc_bytes,
         out_bytes=out_bytes, cin_banks=cin_banks, kout_banks=kout_banks,
         vmem_budget=vmem_budget, kernel="auto", calib=calib)
     greedy_cost = plan_cost(greedy, psums, cfg, calib)
 
-    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
+    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding, dilation)
     if pool:
         oh, ow = (oh // 2) * 2, (ow // 2) * 2
     budget = banking.VMEM_BYTES if vmem_budget is None else vmem_budget
 
     def build(th: int, tw: int, cbn: int, kbn: int) -> TilePlan:
         cb, kb = cgrp // cbn, k // kbn
-        in_th = banking.halo_window(th, stride, kh)
-        in_tw = banking.halo_window(tw, stride, kw)
+        in_th = banking.halo_window(th, stride, kh, dilation)
+        in_tw = banking.halo_window(tw, stride, kw, dilation)
         pth, ptw = (th // 2, tw // 2) if pool else (th, tw)
         return TilePlan(
             cin_banks=cbn, kout_banks=kbn, h_tile=th, w_tile=tw,
@@ -343,16 +352,17 @@ def autotune_network(plan, cin_banks: int = 4, kout_banks: int = 4,
     are scanned in the given order and core counts ascending, with
     strict improvement required to move — ties resolve to the earliest
     (fewest-cores) point."""
-    param_kinds = ("conv", "dense")
+    from repro.core.network import PARAM_KINDS, conv_geometry
+    from repro.kernels.conv2d_ws_trans import transpose_eq_conv_geometry
     last_param = max((i for i, sp in enumerate(plan.layers)
-                      if sp.kind in param_kinds), default=-1)
+                      if sp.kind in PARAM_KINDS), default=-1)
     names = plan.node_names()
     ins = plan.resolved_inputs()
     acts = plan.activation_shapes()
     psum_rows = dict(plan.psum_table())
     tunes: List[LayerTune] = []
     for i, sp in enumerate(plan.layers):
-        if sp.kind != "conv":
+        if sp.kind not in ("conv", "conv_transpose"):
             p = psum_rows[names[i]]
             cyc = perfmodel.calibrated_cycles(p, cfg, calib) if p else 0
             tunes.append(LayerTune(name=names[i], plan=None, cycles=cyc,
@@ -360,16 +370,25 @@ def autotune_network(plan, cin_banks: int = 4, kout_banks: int = 4,
             continue
         h, w, c = plan.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
         kh, kw = sp.kernel
-        from repro.core.network import conv_geometry
         k_, g_ = conv_geometry(sp, c)
         cb_n, kb_n = grouped_banks(c, k_, g_, want_cin=cin_banks,
                                    want_kout=kout_banks)
+        stride, pad = sp.stride, sp.padding
+        if sp.kind == "conv_transpose":
+            # tune on the eq stride-1 conv geometry (what the kernel
+            # lowering launches) but price compute on the zero-skipping
+            # psum count the psum_table carries
+            h, w, pad = transpose_eq_conv_geometry(
+                h, w, kh, kw, sp.stride, sp.padding, sp.dilation)
+            stride = 1
         tunes.append(autotune_layer(
-            h, w, c, k_, kh, kw, stride=sp.stride, padding=sp.padding,
-            pool=sp.pool, groups=g_, in_bytes=in_bytes,
+            h, w, c, k_, kh, kw, stride=stride, padding=pad,
+            pool=sp.pool, groups=g_, dilation=sp.dilation,
+            in_bytes=in_bytes,
             out_bytes=4 if i == last_param else in_bytes,
             cin_banks=cb_n, kout_banks=kb_n, vmem_budget=vmem_budget,
-            cfg=cfg, calib=calib, name=names[i]))
+            cfg=cfg, calib=calib, name=names[i],
+            psums=psum_rows[names[i]]))
     total = sum(lt.cycles for lt in tunes)
     greedy_total = sum(lt.greedy_cycles for lt in tunes)
     best = ("batch", 1, schedule_cycles(tunes, "batch", 1, cfg, calib))

@@ -41,8 +41,8 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Optional
 
-from repro.kernels.ref import (check_groups, conv_out_shape, grouped_banks,
-                               halo_window, normalize_padding)
+from repro.kernels.ref import (check_groups, conv_out_shape, dilated_extent,
+                               grouped_banks, halo_window, normalize_padding)
 from repro.kernels.ref import divisor_banks as _ref_divisor_banks
 
 VMEM_BYTES = 16 * 1024 * 1024        # realistic per-core VMEM (~16 MiB)
@@ -130,7 +130,7 @@ class TilePlan:
     w_tile: int
     n_h_tiles: int
     n_w_tiles: int
-    in_h_tile: int                    # (h_tile-1)·stride + kh
+    in_h_tile: int                    # (h_tile-1)·stride + dilation·(kh-1)+1
     in_w_tile: int
     image_block_bytes: int            # halo'd input window × cb × in_bytes
     weight_block_bytes: int
@@ -192,8 +192,8 @@ def _align_tile(v: int, pool: bool) -> int:
 
 def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
                stride: int = 1, padding="VALID", pool: bool = False,
-               groups: int = 1, in_bytes: int = 1, acc_bytes: int = 4,
-               out_bytes: Optional[int] = None,
+               groups: int = 1, dilation: int = 1, in_bytes: int = 1,
+               acc_bytes: int = 4, out_bytes: Optional[int] = None,
                cin_banks: int = 4, kout_banks: int = 4,
                vmem_budget: Optional[int] = VMEM_BYTES,
                kernel: str = "auto", calib=None) -> TilePlan:
@@ -214,6 +214,12 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
     Depthwise layers therefore bottom out at one-channel blocks whose
     working set is pure DMA — the planner's view of why their arithmetic
     intensity sits on the DMA roofline (perfmodel prices it).
+
+    ``dilation`` widens the halo'd input windows to the dilated kernel
+    extent ``dilation·(k−1)+1`` (weight blocks are unchanged — the taps
+    spread, they do not multiply); a layer whose dilated extent exceeds
+    the padded input raises the same shaped ``ValueError`` as the kernel
+    itself, at plan time.
 
     ``out_bytes`` is the epilogue output element size (1 when the fused
     requantize writes int8; defaults to ``acc_bytes``).
@@ -244,7 +250,19 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
         "kout banks on group boundaries", c, k, groups, cin_banks,
         kout_banks)
     out_bytes = acc_bytes if out_bytes is None else out_bytes
-    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h, w,
+                                            dilation)
+    if (dilated_extent(kh, dilation) > h + pt + pb
+            or dilated_extent(kw, dilation) > w + pl_ + pr):
+        # same error (and wording) as conv2d_ws.setup_conv — an
+        # over-dilated layer must fail at PLAN time with the geometry
+        # spelled out, not produce an out-of-range halo'd BlockSpec
+        raise ValueError(
+            f"dilated kernel extent "
+            f"{dilated_extent(kh, dilation)}×{dilated_extent(kw, dilation)} "
+            f"(kernel {kh}×{kw}, dilation={dilation}) exceeds the padded "
+            f"input {h + pt + pb}×{w + pl_ + pr}")
+    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding, dilation)
     if pool:
         # agree with the kernel: conv2d_ws rejects fused pooling of conv
         # outputs smaller than the 2×2 window, so the planner must not
@@ -257,8 +275,8 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
 
     def build(th: int, tw: int, cbn: int, kbn: int) -> TilePlan:
         cb, kb = cgrp // cbn, k // kbn
-        in_th = halo_window(th, stride, kh)
-        in_tw = halo_window(tw, stride, kw)
+        in_th = halo_window(th, stride, kh, dilation)
+        in_tw = halo_window(tw, stride, kw, dilation)
         pth, ptw = (th // 2, tw // 2) if pool else (th, tw)
         return TilePlan(
             cin_banks=cbn, kout_banks=kbn, h_tile=th, w_tile=tw,
@@ -278,7 +296,8 @@ def plan_tiles(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3, *,
             return replace(plan, pipelined=True)
         from repro.core import perfmodel
         psums = perfmodel.psum_count(h, w, c, k, kh, kw, stride=stride,
-                                     padding=padding, groups=groups)
+                                     padding=padding, groups=groups,
+                                     dilation=dilation)
         est = perfmodel.pipeline_estimate(plan, psums, calib=calib)
         return replace(plan, pipelined=est["profitable"])
 

@@ -39,19 +39,32 @@ from repro.kernels import ops, ref
 
 
 class Backend(Protocol):
-    """One implementation of the IP-core ops (conv + the dense GEMM).
+    """One implementation of the IP-core ops (conv + transposed conv +
+    the dense GEMM).
 
     ``plan`` is a banking.TilePlan: the joint spatial-tile × channel-bank
     decomposition the conv should run under (None → whole map, paper 4×4
-    banking)."""
+    banking).  ``conv_transpose`` is the dense-prediction upsampling
+    layer — its plan is sized on the EQUIVALENT stride-1 conv geometry
+    (the zero-inserted map the kernel actually sweeps)."""
 
     name: str
 
     def conv(self, x: jax.Array, w: jax.Array,
              bias: Optional[jax.Array] = None, *, stride: int = 1,
-             padding="VALID", groups: int = 1, relu: bool = False,
-             pool: bool = False, out_scale=None, wrap8: bool = False,
+             padding="VALID", groups: int = 1, dilation: int = 1,
+             relu: bool = False, pool: bool = False, out_scale=None,
+             wrap8: bool = False,
              plan: Optional[banking.TilePlan] = None) -> jax.Array:
+        ...
+
+    def conv_transpose(self, x: jax.Array, w: jax.Array,
+                       bias: Optional[jax.Array] = None, *,
+                       stride: int = 1, padding="VALID", groups: int = 1,
+                       dilation: int = 1, relu: bool = False,
+                       pool: bool = False, out_scale=None,
+                       plan: Optional[banking.TilePlan] = None
+                       ) -> jax.Array:
         ...
 
     def matmul(self, x: jax.Array, w: jax.Array,
@@ -66,8 +79,8 @@ class RefBackend:
     name = "ref"
 
     def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
-             groups=1, relu=False, pool=False, out_scale=None, wrap8=False,
-             plan=None):
+             groups=1, dilation=1, relu=False, pool=False, out_scale=None,
+             wrap8=False, plan=None):
         if wrap8:
             # epilogue runs on the int32 accumulator, THEN the result wraps
             # to 8 bits — matching the Pallas path (epilogue in the kernel,
@@ -80,12 +93,21 @@ class RefBackend:
             assert x.dtype == jnp.int8
             acc = ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
                                           padding=padding, relu=relu,
-                                          pool=pool, groups=groups)
+                                          pool=pool, groups=groups,
+                                          dilation=dilation)
             return acc.astype(jnp.int8)
         return ref.conv2d_epilogue_ref(x, w, bias, stride=stride,
                                        padding=padding, relu=relu,
                                        pool=pool, out_scale=out_scale,
-                                       groups=groups)
+                                       groups=groups, dilation=dilation)
+
+    def conv_transpose(self, x, w, bias=None, *, stride=1, padding="VALID",
+                       groups=1, dilation=1, relu=False, pool=False,
+                       out_scale=None, plan=None):
+        return ref.conv2d_transpose_epilogue_ref(
+            x, w, bias, stride=stride, padding=padding, relu=relu,
+            pool=pool, out_scale=out_scale, groups=groups,
+            dilation=dilation)
 
     def matmul(self, x, w, bias=None):
         if x.dtype == jnp.int8:
@@ -99,8 +121,8 @@ class PallasBackend:
     name = "pallas"
 
     def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
-             groups=1, relu=False, pool=False, out_scale=None, wrap8=False,
-             plan=None):
+             groups=1, dilation=1, relu=False, pool=False, out_scale=None,
+             wrap8=False, plan=None):
         if plan is not None:
             cin_banks, kout_banks = plan.cin_banks, plan.kout_banks
         else:
@@ -117,8 +139,25 @@ class PallasBackend:
                           groups=groups, cin_banks=cin_banks,
                           kout_banks=kout_banks, h_tile=h_tile,
                           w_tile=w_tile, relu=relu, pool=pool, wrap8=wrap8,
-                          out_scale=out_scale,
+                          out_scale=out_scale, dilation=dilation,
                           pipelined=plan.pipelined if plan else False)
+
+    def conv_transpose(self, x, w, bias=None, *, stride=1, padding="VALID",
+                       groups=1, dilation=1, relu=False, pool=False,
+                       out_scale=None, plan=None):
+        if plan is not None:
+            cin_banks, kout_banks = plan.cin_banks, plan.kout_banks
+        else:
+            cin_banks, kout_banks = ref.grouped_banks(
+                x.shape[-1], w.shape[-1], groups)
+        h_tile = plan.h_tile if plan else 0
+        w_tile = plan.w_tile if plan else 0
+        return ops.conv2d_transpose(
+            x, w, bias, stride=stride, padding=padding, groups=groups,
+            cin_banks=cin_banks, kout_banks=kout_banks, h_tile=h_tile,
+            w_tile=w_tile, relu=relu, pool=pool, out_scale=out_scale,
+            dilation=dilation,
+            pipelined=plan.pipelined if plan else False)
 
     def matmul(self, x, w, bias=None):
         return ops.matmul_ws(x, w, bias)

@@ -77,18 +77,30 @@ from repro.kernels import ref
 
 INPUT = "input"          # reserved node name: the network input
 DEPTHWISE = -1           # LayerSpec.groups sentinel: groups = cin
+PARAM_KINDS = ("conv", "conv_transpose", "dense")   # nodes that own weights
 
 
 @dataclass(frozen=True)
 class LayerSpec:
     """One node of a CNN graph.
 
-    kind: "conv" | "pool" | "avgpool" | "globalpool" | "flatten" |
-    "dense" | "add" | "concat".  ``pool=True`` on a conv layer fuses the
-    2×2/2 max-pool into the kernel epilogue (one HBM round-trip);
-    standalone "pool" / "avgpool" layers are the unfused fallbacks, and
-    "globalpool" is the global average pool ([N,H,W,C] → [N,C]) that lets
-    classifier heads skip the flatten + giant-dense pattern.
+    kind: "conv" | "conv_transpose" | "pool" | "avgpool" | "globalpool" |
+    "flatten" | "dense" | "add" | "concat".  ``pool=True`` on a conv
+    layer fuses the 2×2/2 max-pool into the kernel epilogue (one HBM
+    round-trip); standalone "pool" / "avgpool" layers are the unfused
+    fallbacks, and "globalpool" is the global average pool
+    ([N,H,W,C] → [N,C]) that lets classifier heads skip the flatten +
+    giant-dense pattern.
+
+    ``dilation`` (conv kinds) spaces the kernel taps by inserting
+    ``dilation−1`` zeros between them (rhs dilation — the dilated-context
+    trick that widens receptive fields without shrinking the map).
+    "conv_transpose" is the learned-upsampling node (lhs zero-insertion:
+    output grows ~stride×); its weights share the forward conv layout
+    [KH,KW,C/groups,K] and it lowers onto the SAME weight-stationary
+    kernels via the stride-1 equivalent conv
+    (kernels/conv2d_ws_trans.py), so the int8 epilogue contract
+    (ReLU → pool → requantize) carries over unchanged.
 
     ``groups`` (conv only) selects grouped channel contraction: 1 = dense,
     ``DEPTHWISE`` (−1) resolves to the node's input channel count at walk
@@ -111,6 +123,7 @@ class LayerSpec:
     pool: bool = False                     # conv only: fused 2×2 max-pool
     size: int = 2                          # "pool"/"avgpool": window/stride
     groups: int = 1                        # conv only: 1=dense, −1=depthwise
+    dilation: int = 1                      # conv kinds: kernel-tap spacing
     name: Optional[str] = None             # node label for skip references
     inputs: Tuple[str, ...] = ()           # () → previous layer
 
@@ -141,11 +154,29 @@ def _single(input: Optional[str]) -> Tuple[str, ...]:
 
 def conv(features: int, kernel: int = 3, stride: int = 1,
          padding: ref.Padding = "SAME", relu: bool = True,
-         pool: bool = False, groups: int = 1, name: Optional[str] = None,
+         pool: bool = False, groups: int = 1, dilation: int = 1,
+         name: Optional[str] = None,
          input: Optional[str] = None) -> LayerSpec:
     return LayerSpec("conv", features=features, kernel=(kernel, kernel),
                      stride=stride, padding=padding, relu=relu, pool=pool,
-                     groups=groups, name=name, inputs=_single(input))
+                     groups=groups, dilation=dilation, name=name,
+                     inputs=_single(input))
+
+
+def conv_transpose(features: int, kernel: int = 2, stride: int = 2,
+                   padding: ref.Padding = "VALID", relu: bool = True,
+                   pool: bool = False, groups: int = 1, dilation: int = 1,
+                   name: Optional[str] = None,
+                   input: Optional[str] = None) -> LayerSpec:
+    """Transposed-conv (learned upsampling) node: output spatial size is
+    ``(h−1)·stride + dilated_extent`` under VALID padding and ``h·stride``
+    under SAME — the 2×2/stride-2 default exactly doubles the map, the
+    U-Net decoder idiom.  Weights are forward-conv layout
+    [KH,KW,C/groups,K]."""
+    return LayerSpec("conv_transpose", features=features,
+                     kernel=(kernel, kernel), stride=stride, padding=padding,
+                     relu=relu, pool=pool, groups=groups, dilation=dilation,
+                     name=name, inputs=_single(input))
 
 
 def depthwise(kernel: int = 3, stride: int = 1,
@@ -294,13 +325,19 @@ class NetworkPlan:
 
         for i, sp in enumerate(self.layers):
             s0 = src(ins[i][0])
-            if sp.kind == "conv":
+            if sp.kind in ("conv", "conv_transpose"):
                 if len(s0) != 3:
                     raise ValueError(f"node {names[i]!r}: conv after flatten")
                 kh, kw = sp.kernel
                 k_, _ = conv_geometry(sp, s0[2], names[i])
-                h, w = ref.conv_out_shape(s0[0], s0[1], kh, kw, sp.stride,
-                                          sp.padding)
+                if sp.kind == "conv_transpose":
+                    h, w = ref.conv_transpose_out_shape(
+                        s0[0], s0[1], kh, kw, sp.stride, sp.padding,
+                        sp.dilation)
+                else:
+                    h, w = ref.conv_out_shape(s0[0], s0[1], kh, kw,
+                                              sp.stride, sp.padding,
+                                              sp.dilation)
                 if sp.pool:
                     if h < 2 or w < 2:
                         # same error as plan_tiles / conv2d_ws — the shape
@@ -354,7 +391,7 @@ class NetworkPlan:
         shapes: List[Optional[dict]] = []
         for i, sp in enumerate(self.layers):
             s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
-            if sp.kind == "conv":
+            if sp.kind in ("conv", "conv_transpose"):
                 kh, kw = sp.kernel
                 k_, g_ = conv_geometry(sp, s0[2])
                 shapes.append({"w": (kh, kw, s0[2] // g_, k_),
@@ -388,7 +425,13 @@ class NetworkPlan:
         pool/flatten/merge: free — the fused epilogue absorbs
         post-processing and the output-BRAM crossbar absorbs residual
         adds/concats).  Parallel branches of a DAG cost their SUM: the
-        single layer-at-a-time core serializes them (§4.2)."""
+        single layer-at-a-time core serializes them (§4.2).
+
+        Transposed convs are priced on the zero-skipping bound
+        (``perfmodel.conv_transpose_psum_count(skip_zeros=True)``: one
+        psum per INPUT pixel × tap — the MAC controller skips the
+        inserted zeros); the ~stride²× naive count is available from
+        perfmodel for what an unmodified IP core would burn."""
         names = self.node_names()
         ins = self.resolved_inputs()
         acts = self.activation_shapes()
@@ -400,7 +443,13 @@ class NetworkPlan:
                 k_, g_ = conv_geometry(sp, s0[2], names[i])
                 rows.append((names[i], perfmodel.psum_count(
                     s0[0], s0[1], s0[2], k_, kh, kw, sp.stride,
-                    sp.padding, groups=g_)))
+                    sp.padding, groups=g_, dilation=sp.dilation)))
+            elif sp.kind == "conv_transpose":
+                kh, kw = sp.kernel
+                k_, g_ = conv_geometry(sp, s0[2], names[i])
+                rows.append((names[i], perfmodel.conv_transpose_psum_count(
+                    s0[0], s0[1], s0[2], k_, kh, kw, sp.stride,
+                    sp.padding, groups=g_, dilation=sp.dilation)))
             elif sp.kind == "dense":
                 rows.append((names[i], s0[0] * sp.features))
             else:
@@ -422,15 +471,21 @@ class NetworkPlan:
         the explicit DMA pipeline wins; see banking.plan_tiles).
         ``calib`` (a core.calibration.CalibrationTable) prices the
         crossover under measured terms instead of the analytic defaults;
-        core/autotune.py searches the full plan space against it."""
-        param_kinds = ("conv", "dense")
+        core/autotune.py searches the full plan space against it.
+
+        Transposed convs are planned on their stride-1 EQUIVALENT conv
+        (the zero-inserted map + clipped equivalence pads —
+        conv2d_ws_trans.transpose_eq_conv_geometry), which is the
+        geometry the kernel lowering actually launches, so VMEM fitting
+        and halo math describe the real working set."""
+        from repro.kernels.conv2d_ws_trans import transpose_eq_conv_geometry
         last_param = max((i for i, sp in enumerate(self.layers)
-                          if sp.kind in param_kinds), default=-1)
+                          if sp.kind in PARAM_KINDS), default=-1)
         ins = self.resolved_inputs()
         acts = self.activation_shapes()
         plans: List[Optional[banking.TilePlan]] = []
         for i, sp in enumerate(self.layers):
-            if sp.kind != "conv":
+            if sp.kind not in ("conv", "conv_transpose"):
                 plans.append(None)
                 continue
             h, w, c = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
@@ -438,10 +493,15 @@ class NetworkPlan:
             k_, g_ = conv_geometry(sp, c)
             cb_n, kb_n = banking.grouped_banks(
                 c, k_, g_, want_cin=cin_banks, want_kout=kout_banks)
+            stride, pad = sp.stride, sp.padding
+            if sp.kind == "conv_transpose":
+                h, w, pad = transpose_eq_conv_geometry(
+                    h, w, kh, kw, sp.stride, sp.padding, sp.dilation)
+                stride = 1
             plans.append(banking.plan_tiles(
-                h, w, c, k_, kh, kw, stride=sp.stride,
-                padding=sp.padding, pool=sp.pool, groups=g_,
-                in_bytes=in_bytes,
+                h, w, c, k_, kh, kw, stride=stride,
+                padding=pad, pool=sp.pool, groups=g_,
+                dilation=sp.dilation, in_bytes=in_bytes,
                 out_bytes=4 if i == last_param else in_bytes,
                 cin_banks=cb_n, kout_banks=kb_n,
                 vmem_budget=vmem_budget, kernel=kernel, calib=calib))
@@ -458,7 +518,7 @@ class NetworkPlan:
         acts = self.activation_shapes()
         out: List[Optional[Tuple[int, int]]] = []
         for i, sp in enumerate(self.layers):
-            if sp.kind != "conv":
+            if sp.kind not in ("conv", "conv_transpose"):
                 out.append(None)
                 continue
             s0 = self.input_shape if ins[i][0] < 0 else acts[ins[i][0]]
@@ -532,7 +592,14 @@ class NetworkPlan:
                 _, g_ = conv_geometry(sp, h.shape[-1])
                 h = ref.conv2d_epilogue_ref(
                     h, p["w"], p["b"], stride=sp.stride, padding=sp.padding,
-                    relu=sp.relu, pool=sp.pool, groups=g_)
+                    relu=sp.relu, pool=sp.pool, groups=g_,
+                    dilation=sp.dilation)
+            elif sp.kind == "conv_transpose":
+                _, g_ = conv_geometry(sp, h.shape[-1])
+                h = ref.conv2d_transpose_epilogue_ref(
+                    h, p["w"], p["b"], stride=sp.stride, padding=sp.padding,
+                    relu=sp.relu, pool=sp.pool, groups=g_,
+                    dilation=sp.dilation)
             elif sp.kind == "pool":
                 h = ref.maxpool2d_ref(h, sp.size)
             elif sp.kind == "avgpool":
@@ -632,7 +699,7 @@ def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
     which is the only way the skip add is exact (ref.add_requant_ref is
     the correctness contract)."""
     last_param = max(i for i, sp in enumerate(plan.layers)
-                     if sp.kind in ("conv", "dense"))
+                     if sp.kind in PARAM_KINDS)
     ins = plan.resolved_inputs()
     in_scale = act_scale_from_calibration(calib_x)
     node_scale: List[Optional[jax.Array]] = []  # per-node int8 output scale
@@ -651,7 +718,7 @@ def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
     out_dequant = jnp.float32(1.0)
     for i, sp, p, x in plan.forward_activations(params, calib_x):
         w_ = b_ = rq = ms = None
-        if sp.kind in ("conv", "dense"):
+        if sp.kind in PARAM_KINDS:
             s_act = scale_of(ins[i][0])
             if per_channel:
                 # reduce over everything but the output-channel axis → [K]
@@ -747,11 +814,14 @@ def make_int8_program(qnet: QuantizedNetwork,
                 merges, tile_plans)):
             src = [qin if j < 0 else acts[j] for j in ins[i]]
             h = src[0]
-            if sp.kind == "conv":
-                h = backend.conv(h, w, b, stride=sp.stride,
-                                 padding=sp.padding, groups=geoms[i][1],
-                                 relu=sp.relu, pool=sp.pool, out_scale=rq,
-                                 plan=tp)
+            if sp.kind in ("conv", "conv_transpose"):
+                op = (backend.conv_transpose if sp.kind == "conv_transpose"
+                      else backend.conv)
+                h = op(h, w, b, stride=sp.stride,
+                       padding=sp.padding, groups=geoms[i][1],
+                       dilation=sp.dilation,
+                       relu=sp.relu, pool=sp.pool, out_scale=rq,
+                       plan=tp)
                 if rq is None:                       # final conv: dequantize
                     h = h.astype(jnp.float32) * qnet.out_dequant
             elif sp.kind == "pool":
@@ -983,3 +1053,51 @@ def resnet_bottleneck(input_shape: Tuple[int, int, int] = (32, 32, 8),
     layers += [global_pool(), dense(classes)]
     return NetworkPlan(name="resnet_bottleneck", input_shape=input_shape,
                        layers=tuple(layers))
+
+
+def unet_small(input_shape: Tuple[int, int, int] = (16, 16, 4),
+               classes: int = 3) -> NetworkPlan:
+    """U-Net-style encoder–decoder segmenter: two stride-2 downsampling
+    stages, a bottleneck, then two 2×2/stride-2 ``conv_transpose``
+    upsampling stages each concat-merged with its same-resolution encoder
+    skip (the U-Net long skip, riding the shared-grid int8 concat), and a
+    1×1 per-pixel classifier head — the dense-prediction workload class
+    ROADMAP item 5(b) names.  The output is a full-resolution
+    [H, W, classes] logit map, not a vector."""
+    return NetworkPlan(
+        name="unet_small", input_shape=input_shape,
+        layers=(
+            conv(8, relu=True, name="enc1"),                       # 16×16
+            conv(16, stride=2, relu=True, name="down1"),           # 8×8
+            conv(16, relu=True, name="enc2"),
+            conv(32, stride=2, relu=True, name="down2"),           # 4×4
+            conv(32, relu=True, name="bott"),
+            conv_transpose(16, kernel=2, stride=2, relu=True,
+                           name="up1"),                            # 8×8
+            concat("up1", "enc2", name="cat1"),
+            conv(16, relu=True, name="dec1"),
+            conv_transpose(8, kernel=2, stride=2, relu=True,
+                           name="up2"),                            # 16×16
+            concat("up2", "enc1", name="cat2"),
+            conv(8, relu=True, name="dec2"),
+            conv(classes, kernel=1, relu=False, name="head"),
+        ))
+
+
+def dilated_context(input_shape: Tuple[int, int, int] = (16, 16, 4),
+                    classes: int = 3) -> NetworkPlan:
+    """Dilated-context segmenter (the DeepLab/context-module idiom): a
+    stem plus SAME-padded 3×3 convs at dilation 1 → 2 → 4 keep the map at
+    full resolution while the receptive field grows exponentially
+    (15×15 after the d=4 layer) — dense prediction WITHOUT any
+    down/upsampling, the workload dilation exists for.  A 1×1 head emits
+    the per-pixel logit map."""
+    return NetworkPlan(
+        name="dilated_context", input_shape=input_shape,
+        layers=(
+            conv(8, relu=True, name="stem"),
+            conv(8, relu=True, dilation=2, name="ctx2"),
+            conv(16, relu=True, dilation=4, name="ctx4"),
+            conv(16, relu=True, name="fuse"),
+            conv(classes, kernel=1, relu=False, name="head"),
+        ))

@@ -29,7 +29,7 @@ import math
 from dataclasses import dataclass, replace
 from typing import List, Optional, Sequence, Tuple
 
-from repro.kernels.ref import conv_out_shape
+from repro.kernels.ref import conv_out_shape, conv_transpose_out_shape
 
 
 @dataclass(frozen=True)
@@ -43,15 +43,53 @@ class IPCoreConfig:
 
 
 def psum_count(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
-               stride: int = 1, padding="VALID", groups: int = 1) -> int:
+               stride: int = 1, padding="VALID", groups: int = 1,
+               dilation: int = 1) -> int:
     """One psum per (output pixel × kernel × input channel); stride/padding
     change only the output pixel count.  ``groups > 1`` contracts only the
     C/groups channels of each kernel's group — a depthwise layer
     (groups == C) computes a factor-C fewer psums than its dense
     counterpart while moving the SAME feature maps, which is exactly why
     its cycles floor at the shared DMA interface, not at compute
-    (``network_report`` flags this per layer)."""
-    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding)
+    (``network_report`` flags this per layer).  ``dilation`` spreads the
+    taps without multiplying them — it changes the psum count only
+    through the output pixel count."""
+    oh, ow = conv_out_shape(h, w, kh, kw, stride, padding, dilation)
+    return oh * ow * k * (c // groups)
+
+
+def conv_transpose_psum_count(h: int, w: int, c: int, k: int, kh: int = 3,
+                              kw: int = 3, stride: int = 1,
+                              padding="VALID", groups: int = 1,
+                              dilation: int = 1, skip_zeros: bool = True
+                              ) -> int:
+    """Psum count of a TRANSPOSED conv layer (lhs zero-insertion by
+    ``stride``, then a stride-1 conv — kernels/conv2d_ws_trans.py).
+
+    Two prices, both honest about different hardware:
+
+    * **naive** (``skip_zeros=False``): the equivalent stride-1 conv
+      sweeps the zero-inserted map as-is — one psum per (output pixel ×
+      kernel × group channel), ``oh·ow·k·c/groups``.  This is what the
+      unmodified IP core pays: its MAC array cannot tell an inserted
+      zero from data.
+    * **skip** (``skip_zeros=True``, the default): every psum whose
+      image window lands entirely on inserted zeros is free, and only
+      ~1/stride² of each window's taps carry data — the input-pixel
+      accounting ``h·w·k·c/groups``: one psum per (INPUT pixel × kernel
+      × group channel), since each real input pixel is touched by
+      exactly KH·KW output taps.  A zero-skipping MAC controller (the
+      standard deconv-accelerator trick the FPGA survey literature
+      describes) achieves this bound.
+
+    The ratio naive/skip ≈ stride² is the upsampling waste a
+    zero-skipping datapath recovers; ``network_report`` rows for
+    transposed layers are priced on the skip count with the naive count
+    recorded alongside."""
+    if skip_zeros:
+        return h * w * k * (c // groups)
+    oh, ow = conv_transpose_out_shape(h, w, kh, kw, stride, padding,
+                                      dilation)
     return oh * ow * k * (c // groups)
 
 

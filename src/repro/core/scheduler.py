@@ -89,14 +89,27 @@ class KoutShardedBackend:
 
     def conv(self, x, w, bias=None, *, groups=1, out_scale=None, plan=None,
              **kw):
+        return self._sharded(self.inner.conv, x, w, bias, groups=groups,
+                             out_scale=out_scale, plan=plan, **kw)
+
+    def conv_transpose(self, x, w, bias=None, *, groups=1, out_scale=None,
+                       plan=None, **kw):
+        """Kernel-set division of a TRANSPOSED conv: identical sharding
+        law — the transpose's output channels are its K kernel sets, each
+        core upsamples the same input map with its slice, and the slices
+        concatenate on the channel axis (the output-BRAM crossbar)."""
+        return self._sharded(self.inner.conv_transpose, x, w, bias,
+                             groups=groups, out_scale=out_scale, plan=plan,
+                             **kw)
+
+    def _sharded(self, op, x, w, bias, *, groups, out_scale, plan, **kw):
         k = w.shape[-1]
         if groups > 1:
-            return self._conv_grouped(x, w, bias, groups=groups,
+            return self._conv_grouped(op, x, w, bias, groups=groups,
                                       out_scale=out_scale, plan=plan, **kw)
         n = self._shards(k)
         if n == 1:
-            return self.inner.conv(x, w, bias, out_scale=out_scale,
-                                   plan=plan, **kw)
+            return op(x, w, bias, out_scale=out_scale, plan=plan, **kw)
         if plan is not None:
             # re-bank for the per-core kernel slice (K/n output channels)
             plan = replace(plan, kout_banks=divisor_banks(
@@ -104,14 +117,15 @@ class KoutShardedBackend:
         outs = []
         for i in range(n):                 # one iteration per fabric core
             sl = slice(i * (k // n), (i + 1) * (k // n))
-            outs.append(self.inner.conv(
+            outs.append(op(
                 x, w[..., sl], None if bias is None else bias[sl],
                 out_scale=(out_scale if out_scale is None
                            or jnp.ndim(out_scale) == 0 else out_scale[sl]),
                 plan=plan, **kw))
         return jnp.concatenate(outs, axis=-1)
 
-    def _conv_grouped(self, x, w, bias, *, groups, out_scale, plan, **kw):
+    def _conv_grouped(self, op, x, w, bias, *, groups, out_scale, plan,
+                      **kw):
         """Kernel-set division of a grouped conv: each core's contiguous
         K/n slice stays group-aligned (tiles one group, or covers whole
         groups) and reads only the matching cin slice."""
@@ -120,8 +134,8 @@ class KoutShardedBackend:
         cgrp = x.shape[-1] // groups         # cin channels per group
         n = min(self.n_cores, k)
         if n == 1:
-            return self.inner.conv(x, w, bias, groups=groups,
-                                   out_scale=out_scale, plan=plan, **kw)
+            return op(x, w, bias, groups=groups,
+                      out_scale=out_scale, plan=plan, **kw)
         s = k // n                           # kernel sets per core
         if k % n or (kg % s and s % kg):
             raise ValueError(
@@ -141,7 +155,7 @@ class KoutShardedBackend:
                 else:                        # within one group: dense shard
                     kb_n = divisor_banks(s, plan.kout_banks)
                 shard_plan = replace(plan, kout_banks=kb_n, groups=g_s)
-            outs.append(self.inner.conv(
+            outs.append(op(
                 x[..., gi0 * cgrp:gi1 * cgrp], w[..., sl],
                 None if bias is None else bias[sl], groups=g_s,
                 out_scale=(out_scale if out_scale is None
@@ -180,12 +194,12 @@ class SpatialShardedBackend:
         self.name = f"{inner.name}@spatial{n_cores}"
 
     def conv(self, x, w, bias=None, *, stride=1, padding="VALID",
-             pool=False, plan=None, **kw):
+             dilation=1, pool=False, plan=None, **kw):
         n, h, w_dim, c = x.shape
         kh, kw_ = w.shape[:2]
         (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw_, stride,
-                                                h, w_dim)
-        oh, _ = conv_out_shape(h, w_dim, kh, kw_, stride, padding)
+                                                h, w_dim, dilation)
+        oh, _ = conv_out_shape(h, w_dim, kh, kw_, stride, padding, dilation)
         if pool:
             oh = (oh // 2) * 2           # floor semantics, like the kernel
         unit = 2 if pool else 1          # pool-aligned band boundaries
@@ -193,22 +207,42 @@ class SpatialShardedBackend:
         shards = min(self.n_cores, rows)
         if shards <= 1:
             return self.inner.conv(x, w, bias, stride=stride,
-                                   padding=padding, pool=pool, plan=plan,
-                                   **kw)
+                                   padding=padding, dilation=dilation,
+                                   pool=pool, plan=plan, **kw)
         # balanced unit split: the first (rows % shards) bands get one more
         base, rem = divmod(rows, shards)
         outs, oy0 = [], 0
         for i in range(shards):
             oy1 = oy0 + (base + (1 if i < rem else 0)) * unit
             a = oy0 * stride - pt        # input rows, unpadded coordinates
-            b_ = a + halo_window(oy1 - oy0, stride, kh)
+            # the band halo is the DILATED kernel extent minus stride —
+            # dilation widens every band's overlap exactly like the tiled
+            # kernel's BlockSpecs
+            b_ = a + halo_window(oy1 - oy0, stride, kh, dilation)
             lo, hi = max(a, 0), min(b_, h)
             outs.append(self.inner.conv(
                 x[:, lo:hi], w, bias, stride=stride,
-                padding=((lo - a, b_ - hi), (pl_, pr)), pool=pool,
-                plan=plan, **kw))
+                padding=((lo - a, b_ - hi), (pl_, pr)), dilation=dilation,
+                pool=pool, plan=plan, **kw))
             oy0 = oy1
         return jnp.concatenate(outs, axis=1)
+
+    def conv_transpose(self, x, w, bias=None, *, stride=1, padding="VALID",
+                       dilation=1, **kw):
+        """Row-band a TRANSPOSED conv by lowering it to its equivalent
+        stride-1 conv first (kernels/conv2d_ws_trans.transpose_eq_conv_
+        inputs: zero-inserted map + flipped kernel + "full" padding) and
+        banding THAT through ``self.conv`` — each core sweeps a halo'd
+        band of the upsampled map, which is exactly what replicated
+        fixed-size image BRAMs holding one band each would do.  Bit-exact
+        with the unsharded kernel because the lowering is the SAME one
+        conv2d_ws_transpose performs before launching."""
+        from repro.kernels.conv2d_ws_trans import transpose_eq_conv_inputs
+        xd, eq_pads = transpose_eq_conv_inputs(
+            x, w.shape[0], w.shape[1], stride=stride, padding=padding,
+            dilation=dilation)
+        return self.conv(xd, jnp.flip(w, (0, 1)), bias, stride=1,
+                         padding=eq_pads, dilation=dilation, **kw)
 
     def matmul(self, x, w, bias=None):
         return self.inner.matmul(x, w, bias)

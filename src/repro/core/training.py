@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import banking
-from repro.core.network import NetworkPlan
+from repro.core.network import PARAM_KINDS, NetworkPlan
 from repro.core.quantize import fake_quant_act, fake_quant_weight
 from repro.kernels import ops, ref
 from repro.optim.adamw import AdamWConfig, adamw_update
@@ -100,21 +100,23 @@ def float_forward(plan: NetworkPlan, params: Sequence[Optional[dict]],
     ins = plan.resolved_inputs()
     geoms = plan.conv_geometries()
     last_param = max((i for i, sp in enumerate(plan.layers)
-                      if sp.kind in ("conv", "dense")), default=-1)
+                      if sp.kind in PARAM_KINDS), default=-1)
     x0 = fake_quant_act(x) if qat else x
     acts: List[jax.Array] = []
     for i, sp in enumerate(plan.layers):
         p = params[i]
         src = [x0 if j < 0 else acts[j] for j in ins[i]]
         h = src[0]
-        if sp.kind == "conv":
+        if sp.kind in ("conv", "conv_transpose"):
             k_, g_ = geoms[i]
             w = fake_quant_weight(p["w"], per_channel) if qat else p["w"]
             cb_n, kb_n = banking.grouped_banks(h.shape[-1], k_, g_)
-            h = ops.conv2d(
+            op = (ops.conv2d_transpose if sp.kind == "conv_transpose"
+                  else ops.conv2d)
+            h = op(
                 h, w, p["b"], stride=sp.stride, padding=sp.padding,
-                groups=g_, cin_banks=cb_n, kout_banks=kb_n,
-                relu=sp.relu, pool=sp.pool)
+                groups=g_, dilation=sp.dilation, cin_banks=cb_n,
+                kout_banks=kb_n, relu=sp.relu, pool=sp.pool)
             if qat and i != last_param:
                 h = fake_quant_act(h)
         elif sp.kind == "pool":
@@ -149,14 +151,20 @@ def float_forward(plan: NetworkPlan, params: Sequence[Optional[dict]],
 
 
 def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
-    """Mean cross-entropy of integer labels, computed in f32."""
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    """Mean cross-entropy of integer labels over the LAST (class) axis,
+    computed in f32.  Leading dims are arbitrary: classifier heads pass
+    [N, classes] + [N] labels, dense-prediction heads pass per-pixel
+    [N, H, W, classes] + [N, H, W] label maps — every pixel is one term
+    of the mean."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     return -jnp.mean(
-        jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
-                            axis=1))
+        jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                            axis=-1))
 
 
 def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Fraction of correct argmax predictions over the last axis —
+    per-sample for classifiers, per-pixel for segmentation maps."""
     return jnp.mean((jnp.argmax(logits, axis=-1) == labels)
                     .astype(jnp.float32))
 
@@ -241,5 +249,32 @@ def synthetic_digits(rng: np.random.Generator, n: int,
     templates = np.repeat(np.repeat(base, 3, axis=1), 3, axis=2)[:, :h, :w]
     y = rng.integers(0, classes, size=n)
     x = templates[y] + noise * rng.normal(size=(n, h, w, c))
+    return (jnp.asarray(x, jnp.float32),
+            jnp.asarray(y, jnp.int32))
+
+
+def synthetic_segmentation(rng: np.random.Generator, n: int,
+                           input_shape: Tuple[int, int, int] = (16, 16, 4),
+                           classes: int = 3, noise: float = 0.3,
+                           template_seed: int = 0
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """A synthetic dense-prediction set: each image is a per-pixel class
+    map (coarse random label blobs upsampled 4×, so regions are several
+    pixels wide) rendered through one channel signature per class, plus
+    noise.  The label is the [H, W] class map itself — what the
+    ``unet_small`` / ``dilated_context`` heads must reproduce per pixel.
+    A few conv layers separate it easily, which is what the segmentation
+    training smokes and the QAT round-trip acceptance need.
+
+    Like :func:`synthetic_digits`, the class signatures and blob layout
+    statistics come from ``template_seed`` so train/eval calls draw from
+    the same task; ``rng`` drives the per-sample blobs and noise."""
+    h, w, c = input_shape
+    trng = np.random.default_rng(template_seed)
+    sig = trng.normal(size=(classes, c))              # channel signature
+    coarse = rng.integers(0, classes,
+                          size=(n, max(1, -(-h // 4)), max(1, -(-w // 4))))
+    y = np.repeat(np.repeat(coarse, 4, axis=1), 4, axis=2)[:, :h, :w]
+    x = sig[y] + noise * rng.normal(size=(n, h, w, c))
     return (jnp.asarray(x, jnp.float32),
             jnp.asarray(y, jnp.int32))

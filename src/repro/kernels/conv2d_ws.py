@@ -74,8 +74,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ref import (check_groups, conv_out_shape, halo_window,
-                               normalize_padding)
+from repro.kernels.ref import (check_groups, conv_out_shape, dilated_extent,
+                               halo_window, normalize_padding)
 
 
 class ConvGeom(NamedTuple):
@@ -111,11 +111,13 @@ class ConvGeom(NamedTuple):
     tiled: bool
     int_path: bool
     requant: bool
+    dilation: int = 1
 
 
 def setup_conv(x, w, *, stride: int = 1, padding="VALID", groups: int = 1,
                cin_banks: int = 4, kout_banks: int = 4, h_tile: int = 0,
-               w_tile: int = 0, pool: bool = False, requant: bool = False):
+               w_tile: int = 0, pool: bool = False, requant: bool = False,
+               dilation: int = 1):
     """Validate one conv layer pass and materialize its padded input.
 
     Returns ``(x_padded, geom)`` where ``x_padded`` carries the zero
@@ -140,8 +142,15 @@ def setup_conv(x, w, *, stride: int = 1, padding="VALID", groups: int = 1,
             f"paper banking invariant (§4.1): C/groups={cgrp} and K={k} "
             f"must divide by the bank counts ({cin_banks}, {kout_banks})")
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
-                                            h, w_dim)
-    oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding)
+                                            h, w_dim, dilation)
+    oh, ow = conv_out_shape(h, w_dim, kh, kw, stride, padding, dilation)
+    if oh < 1 or ow < 1:
+        # same error as banking.plan_tiles — planner and kernel agree
+        raise ValueError(
+            f"dilated kernel extent "
+            f"{dilated_extent(kh, dilation)}×{dilated_extent(kw, dilation)} "
+            f"(kernel {kh}×{kw}, dilation={dilation}) exceeds the padded "
+            f"input {h + pt + pb}×{w_dim + pl_ + pr}")
     if pool:
         if oh < 2 or ow < 2:
             # same error as banking.plan_tiles — planner and kernel agree
@@ -156,9 +165,10 @@ def setup_conv(x, w, *, stride: int = 1, padding="VALID", groups: int = 1,
             "tile edges", th, tw)
     n_th, n_tw = -(-oh // th), -(-ow // tw)
     tiled = (th, tw) != (oh, ow)
-    # halo'd input window per tile: (tile-1)·s + k, overlapping by k − s
-    in_th = halo_window(th, stride, kh)
-    in_tw = halo_window(tw, stride, kw)
+    # halo'd input window per tile: (tile-1)·s + d·(k-1)+1, overlapping by
+    # the dilated kernel extent minus the stride
+    in_th = halo_window(th, stride, kh, dilation)
+    in_tw = halo_window(tw, stride, kw, dilation)
     hp, wp = h + pt + pb, w_dim + pl_ + pr
     # extend the padded map so the LAST tile's window is in bounds; the
     # matching garbage output rows/cols are sliced off after the kernel
@@ -184,13 +194,14 @@ def setup_conv(x, w, *, stride: int = 1, padding="VALID", groups: int = 1,
         bpg=kout_banks // groups,
         th=th, tw=tw, n_th=n_th, n_tw=n_tw, in_th=in_th, in_tw=in_tw,
         hp=hp, wp=wp, pth=pth, ptw=ptw, poh=poh, pow_=pow_,
-        tiled=tiled, int_path=x.dtype == jnp.int8, requant=requant)
+        tiled=tiled, int_path=x.dtype == jnp.int8, requant=requant,
+        dilation=dilation)
     return x, geom
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
                  kw: int, stride: int, cin_banks: int, relu: bool,
-                 pool: bool, requant: bool, acc_dtype):
+                 pool: bool, requant: bool, acc_dtype, dilation: int = 1):
     co = pl.program_id(4)
 
     th, tw, kb = acc_ref.shape
@@ -206,12 +217,14 @@ def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
     acc = acc_ref[...]                                 # [TH, TW, KB]
     x = x_ref[0]                                       # [in_th, in_tw, CB]
     # KH×KW shifted matmuls — the 9-MAC adder tree on the MXU; stride-s
-    # output pixels read every s-th input row/column of the shifted slab
+    # output pixels read every s-th input row/column of the shifted slab;
+    # a dilated kernel's taps sit dilation pixels apart
     for dy in range(kh):
         for dx in range(kw):
             xs = jax.lax.slice(
-                x, (dy, dx, 0),
-                (dy + (th - 1) * stride + 1, dx + (tw - 1) * stride + 1, cb),
+                x, (dy * dilation, dx * dilation, 0),
+                (dy * dilation + (th - 1) * stride + 1,
+                 dx * dilation + (tw - 1) * stride + 1, cb),
                 (stride, stride, 1)).reshape(th * tw, cb)
             wk = w_ref[dy, dx]                         # [CB, KB]
             acc = acc + jnp.dot(
@@ -238,11 +251,11 @@ def _conv_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *, kh: int,
 
 @functools.partial(jax.jit, static_argnames=(
     "stride", "padding", "groups", "cin_banks", "kout_banks", "h_tile",
-    "w_tile", "relu", "pool", "interpret"))
+    "w_tile", "relu", "pool", "dilation", "interpret"))
 def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
               padding="VALID", groups: int = 1, cin_banks: int = 4,
               kout_banks: int = 4, h_tile: int = 0, w_tile: int = 0,
-              relu: bool = False, pool: bool = False,
+              relu: bool = False, pool: bool = False, dilation: int = 1,
               interpret: bool = False):
     """Generalized paper-dataflow convolution with fused epilogue and
     halo-aware spatial tiling.
@@ -283,7 +296,7 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
     x, g = setup_conv(x, w, stride=stride, padding=padding, groups=groups,
                       cin_banks=cin_banks, kout_banks=kout_banks,
                       h_tile=h_tile, w_tile=w_tile, pool=pool,
-                      requant=out_scale is not None)
+                      requant=out_scale is not None, dilation=dilation)
     n, kh, kw, k = g.n, g.kh, g.kw, g.k
     th, tw, n_th, n_tw = g.th, g.tw, g.n_th, g.n_tw
     in_th, in_tw, hp, wp = g.in_th, g.in_tw, g.hp, g.wp
@@ -322,7 +335,8 @@ def conv2d_ws(x, w, bias=None, out_scale=None, *, stride: int = 1,
 
     kernel = functools.partial(
         _conv_kernel, kh=kh, kw=kw, stride=stride, cin_banks=cin_banks,
-        relu=relu, pool=pool, requant=requant, acc_dtype=acc_dtype)
+        relu=relu, pool=pool, requant=requant, acc_dtype=acc_dtype,
+        dilation=dilation)
     out = pl.pallas_call(
         kernel,
         grid=(n, n_th, n_tw, kout_banks, cin_banks),

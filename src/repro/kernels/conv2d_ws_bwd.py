@@ -5,16 +5,15 @@ on-accelerator (DESIGN.md §3; ROADMAP "conv backward pass").
 Two kernels, both re-statements of the forward architecture rather than
 new dataflows:
 
-* **input gradient** = a transposed convolution, executed as
-  zero-insertion dilation of the cotangent + spatial kernel flip +
-  channel-axis swap, then the ORDINARY stride-1 forward kernel
-  (``conv2d_ws``) with "full" padding.  This literally reuses the halo'd
-  spatial-tile grid machinery: the dilated cotangent streams through the
-  same (N, h_tiles, w_tiles, kout, cin) grid, with the cotangent's K
-  channels playing the cin-bank role and the input's C channels the
-  kout-bank role.  Rows the strided forward never reached appear as
-  negative "full" padding — folded into a slice of the dilated map
-  because the image-BRAM zero margins can only add, never remove.
+* **input gradient** = a transposed convolution of the cotangent with
+  channel-swapped weights, pinned to the forward input's spatial shape.
+  Since PR 8 the zero-insertion / kernel-flip / "full"-padding lowering
+  lives in the FIRST-CLASS transpose path
+  (kernels/conv2d_ws_trans.conv2d_ws_transpose) — this module only adds
+  the gradient-duality framing: the cotangent's K channels play the
+  cin-bank role and the input's C channels the kout-bank role, and
+  ``out_spatial`` restores the stride remainder the forward's floor
+  division discarded.
 
 * **weight gradient** = a batched correlation: tap (dy,dx) of dW is the
   GEMM  x_window(dy,dx)ᵀ @ g  contracting over N·OH·OW, so the whole
@@ -34,28 +33,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.conv2d_ws import conv2d_ws
+from repro.kernels.conv2d_ws_trans import conv2d_ws_transpose
 from repro.kernels.matmul_ws import matmul_ws
 from repro.kernels.ref import (check_groups, grouped_banks,
-                               grouped_transpose_weights, normalize_padding)
+                               grouped_swap_weights, normalize_padding)
 
 
 def conv2d_ws_input_grad(g, w, x_shape, *, stride: int = 1,
                          padding="VALID", groups: int = 1,
                          cin_banks: int = 4, kout_banks: int = 4,
                          h_tile: int = 0, w_tile: int = 0,
-                         interpret: bool = False):
+                         dilation: int = 1, interpret: bool = False):
     """dL/dx [N,H,W,C] from cotangent ``g`` [N,OH,OW,K] and weights ``w``
-    [KH,KW,C/groups,K], through the forward WS kernel:
-
-    1. zero-insertion-dilate ``g`` by the forward stride (the transposed
-       conv's lhs dilation, materialized the way the FPGA would write a
-       sparse map into its image BRAMs);
-    2. flip the kernel spatially and swap its channel axes per group →
-       [KH,KW,K/groups,C] (ref.grouped_transpose_weights);
-    3. run ``conv2d_ws`` at stride 1 under "full" padding
-       (kh−1−pt …), slicing the dilated map first wherever the full
-       padding is negative (forward padding larger than the kernel).
+    [KH,KW,C/groups,K]: the transposed conv of the cotangent with
+    channel-swapped weights, via the shared first-class lowering
+    (kernels/conv2d_ws_trans) — zero-insertion of the cotangent, kernel
+    flip, stride-1 forward WS kernel under the "full"-padding
+    equivalence, with ``out_spatial=(H,W)`` restoring the rows a strided
+    forward's floor division never reached.
 
     The transposed conv inherits the forward's group structure: the
     cotangent's K channels play the cin role (K/groups per group) and the
@@ -70,40 +65,21 @@ def conv2d_ws_input_grad(g, w, x_shape, *, stride: int = 1,
     kh, kw, cg, k = w.shape
     assert c == cg * groups, (c, cg, groups)
     assert g.shape[0] == n and g.shape[3] == k, (g.shape, x_shape, w.shape)
-    (pt, _), (pl_, _) = normalize_padding(padding, kh, kw, stride, h, w_dim)
-    oh, ow = g.shape[1], g.shape[2]
-
-    gf = g.astype(jnp.float32)
-    if stride > 1:
-        gd = jnp.zeros((n, (oh - 1) * stride + 1, (ow - 1) * stride + 1, k),
-                       jnp.float32)
-        gd = gd.at[:, ::stride, ::stride, :].set(gf)
-    else:
-        gd = gf
-    # full padding of the transposed conv; negative entries (forward pad
-    # beyond the kernel extent) become slices of the dilated map
-    pads = [kh - 1 - pt, h + pt - (oh - 1) * stride - 1,
-            kw - 1 - pl_, w_dim + pl_ - (ow - 1) * stride - 1]
-    if min(pads) < 0:
-        top, bot, left, right = (max(0, -p) for p in pads)
-        gd = gd[:, top:gd.shape[1] - bot, left:gd.shape[2] - right, :]
-        pads = [max(0, p) for p in pads]
-    wt = grouped_transpose_weights(w, groups).astype(jnp.float32)
-
     # channel roles swap in the transposed conv (K plays cin, C plays
     # kout), so the bank requests re-legalize against (K, C)
     cb_n, kb_n = grouped_banks(k, c, groups, want_cin=cin_banks,
                                want_kout=max(kout_banks, groups))
-    return conv2d_ws(
-        gd, wt, None, stride=1,
-        padding=((pads[0], pads[1]), (pads[2], pads[3])),
-        groups=groups, cin_banks=cb_n, kout_banks=kb_n,
-        h_tile=h_tile, w_tile=w_tile, interpret=interpret)
+    return conv2d_ws_transpose(
+        g.astype(jnp.float32),
+        grouped_swap_weights(w, groups).astype(jnp.float32),
+        stride=stride, padding=padding, groups=groups, dilation=dilation,
+        cin_banks=cb_n, kout_banks=kb_n, h_tile=h_tile, w_tile=w_tile,
+        out_spatial=(h, w_dim), interpret=interpret)
 
 
 def conv2d_ws_weight_grad(x, g, kh: int, kw: int, *, stride: int = 1,
                           padding="VALID", groups: int = 1,
-                          interpret: bool = False):
+                          dilation: int = 1, interpret: bool = False):
     """dL/dw [KH,KW,C/groups,K] from input ``x`` [N,H,W,C] and cotangent
     ``g`` [N,OH,OW,K], as KH·KW weight-stationary GEMMs: tap (dy,dx)
     contracts the strided input window starting at (dy,dx) with the
@@ -123,7 +99,7 @@ def conv2d_ws_weight_grad(x, g, kh: int, kw: int, *, stride: int = 1,
     check_groups(c, k, groups)
     cg, kg = c // groups, k // groups
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h,
-                                            w_dim)
+                                            w_dim, dilation)
     xp = jnp.pad(x.astype(jnp.float32),
                  ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
     gm = g.astype(jnp.float32).reshape(n * oh * ow, k)
@@ -131,8 +107,9 @@ def conv2d_ws_weight_grad(x, g, kh: int, kw: int, *, stride: int = 1,
     for dy in range(kh):
         for dx in range(kw):
             xs = jax.lax.slice(
-                xp, (0, dy, dx, 0),
-                (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
+                xp, (0, dy * dilation, dx * dilation, 0),
+                (n, dy * dilation + (oh - 1) * stride + 1,
+                 dx * dilation + (ow - 1) * stride + 1,
                  c), (1, stride, stride, 1))
             xm = xs.reshape(n * oh * ow, c)
             if groups == 1:

@@ -63,7 +63,8 @@ def _pipe_kernel(x_hbm, w_hbm, b_ref, s_ref, o_hbm, xb, wb, ob, acc_ref,
                  in_sem, w_sem, out_sem, *, kh: int, kw: int, stride: int,
                  cin_banks: int, kout_banks: int, th: int, tw: int,
                  pth: int, ptw: int, cb: int, kb: int, cgrp: int, bpg: int,
-                 relu: bool, pool: bool, requant: bool, acc_dtype):
+                 relu: bool, pool: bool, requant: bool, acc_dtype,
+                 dilation: int = 1):
     b, ty, tx, ko = (pl.program_id(i) for i in range(4))
     n_th, n_tw = pl.num_programs(1), pl.num_programs(2)
     n_steps = pl.num_programs(0) * n_th * n_tw * kout_banks
@@ -140,12 +141,13 @@ def _pipe_kernel(x_hbm, w_hbm, b_ref, s_ref, o_hbm, xb, wb, ob, acc_ref,
         x = xb[slot]                                # [in_th, in_tw, CB]
         # KH×KW shifted matmuls — identical operand blocks, identical
         # order to conv2d_ws's grid step, hence bit-exact accumulation
+        # (dilated taps sit dilation pixels apart, exactly as there)
         for dy in range(kh):
             for dx in range(kw):
                 xs = jax.lax.slice(
-                    x, (dy, dx, 0),
-                    (dy + (th - 1) * stride + 1,
-                     dx + (tw - 1) * stride + 1, cb),
+                    x, (dy * dilation, dx * dilation, 0),
+                    (dy * dilation + (th - 1) * stride + 1,
+                     dx * dilation + (tw - 1) * stride + 1, cb),
                     (stride, stride, 1)).reshape(th * tw, cb)
                 wk = wb[slot, dy, dx]               # [CB, KB]
                 acc = acc + jnp.dot(
@@ -187,12 +189,12 @@ def _pipe_kernel(x_hbm, w_hbm, b_ref, s_ref, o_hbm, xb, wb, ob, acc_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "stride", "padding", "groups", "cin_banks", "kout_banks", "h_tile",
-    "w_tile", "relu", "pool", "interpret"))
+    "w_tile", "relu", "pool", "dilation", "interpret"))
 def conv2d_ws_pipe(x, w, bias=None, out_scale=None, *, stride: int = 1,
                    padding="VALID", groups: int = 1, cin_banks: int = 4,
                    kout_banks: int = 4, h_tile: int = 0, w_tile: int = 0,
                    relu: bool = False, pool: bool = False,
-                   interpret: bool = False):
+                   dilation: int = 1, interpret: bool = False):
     """Drop-in replacement for ``conv2d_ws`` with explicit double-buffered
     DMA (see the module docstring).  Same signature, same contracts, same
     results bit-for-bit; ``banking.plan_tiles`` decides per layer which
@@ -200,7 +202,7 @@ def conv2d_ws_pipe(x, w, bias=None, out_scale=None, *, stride: int = 1,
     x, g = setup_conv(x, w, stride=stride, padding=padding, groups=groups,
                       cin_banks=cin_banks, kout_banks=kout_banks,
                       h_tile=h_tile, w_tile=w_tile, pool=pool,
-                      requant=out_scale is not None)
+                      requant=out_scale is not None, dilation=dilation)
     acc_dtype = jnp.int32 if g.int_path else jnp.float32
     if bias is None:
         bias = jnp.zeros((g.k,), acc_dtype)
@@ -214,7 +216,8 @@ def conv2d_ws_pipe(x, w, bias=None, out_scale=None, *, stride: int = 1,
         _pipe_kernel, kh=g.kh, kw=g.kw, stride=g.stride,
         cin_banks=g.cin_banks, kout_banks=g.kout_banks, th=g.th, tw=g.tw,
         pth=g.pth, ptw=g.ptw, cb=g.cb, kb=g.kb, cgrp=g.cgrp, bpg=g.bpg,
-        relu=relu, pool=pool, requant=g.requant, acc_dtype=acc_dtype)
+        relu=relu, pool=pool, requant=g.requant, acc_dtype=acc_dtype,
+        dilation=g.dilation)
     out = pl.pallas_call(
         kernel,
         grid=(g.n, g.n_th, g.n_tw, g.kout_banks),

@@ -1,0 +1,123 @@
+"""Transposed convolution on the SAME weight-stationary dataflow — the
+dense-prediction upsampling layer (ROADMAP item 5(b)), promoted from the
+backward-pass machinery of kernels/conv2d_ws_bwd.py to a first-class
+forward contract.
+
+A transposed conv IS an ordinary stride-1 conv on a lowered input: the
+lhs is zero-insertion-dilated by the (output-growth) stride, the kernel
+is flipped spatially, and the "full" padding of the equivalence
+(``ref.conv_transpose_eq_params``) frames the dilated map.  No new
+device code exists here — the lowered problem streams through
+``conv2d_ws`` or the double-buffered ``conv2d_ws_pipe`` with their whole
+contract intact (halo'd spatial tiling, grouped banking, fused
+ReLU→pool→requantize epilogue, int8 datapath), which is exactly how the
+FPGA would run it: write the sparse upsampled map into the image BRAMs
+and let the unchanged IP core sweep it.
+
+Negative equivalence pads (forward padding beyond the kernel extent)
+become slices of the dilated map before the kernel launch, because the
+image-BRAM zero margins can only add pixels, never remove them.
+
+The backward input-gradient kernel (conv2d_ws_bwd.conv2d_ws_input_grad)
+is now the thinnest special case of this path: a transposed conv of the
+cotangent with channel-swapped weights, pinned to the forward input's
+spatial shape.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_ws import conv2d_ws
+from repro.kernels.conv2d_ws_pipe import conv2d_ws_pipe
+from repro.kernels.ref import (check_groups, conv_transpose_eq_params,
+                               grouped_banks)
+
+
+def transpose_eq_conv_geometry(h: int, w: int, kh: int, kw: int,
+                               stride: int = 1, padding="VALID",
+                               dilation: int = 1, out_spatial=None):
+    """Shape-only companion of :func:`transpose_eq_conv_inputs`: the
+    (h_eq, w_eq, eq_pads) of the equivalent stride-1 conv — the dilated
+    map after negative-pad cropping plus the clipped (all-≥0) explicit
+    pads.  Tile/bank planners (banking.plan_tiles via
+    NetworkPlan.tile_plans) price a transposed layer on exactly this
+    geometry, so plans and the kernel lowering can never disagree."""
+    _, eq_pads = conv_transpose_eq_params(h, w, kh, kw, stride, padding,
+                                          dilation, out_spatial)
+    hd = (h - 1) * stride + 1 if stride > 1 else h
+    wd = (w - 1) * stride + 1 if stride > 1 else w
+    pads = [eq_pads[0][0], eq_pads[0][1], eq_pads[1][0], eq_pads[1][1]]
+    hd -= max(0, -pads[0]) + max(0, -pads[1])
+    wd -= max(0, -pads[2]) + max(0, -pads[3])
+    pads = [max(0, p) for p in pads]
+    return hd, wd, ((pads[0], pads[1]), (pads[2], pads[3]))
+
+
+def transpose_eq_conv_inputs(x, kh: int, kw: int, *, stride: int = 1,
+                             padding="VALID", dilation: int = 1,
+                             out_spatial=None):
+    """Lower a transposed conv's input to its equivalent stride-1 conv:
+    zero-insert ``x`` by ``stride`` (the lhs dilation, materialized the
+    way the FPGA writes a sparse map into its image BRAMs) and resolve
+    the equivalence's explicit padding, folding any negative pad into a
+    slice of the dilated map.
+
+    Returns ``(x_eq, eq_pads)`` with ``eq_pads = ((t,b),(l,r))`` all
+    ≥ 0, ready for ``conv2d_ws(x_eq, flip(w), stride=1,
+    padding=eq_pads, dilation=dilation)``.
+    """
+    n, h, w_dim, c = x.shape
+    _, eq_pads = conv_transpose_eq_params(h, w_dim, kh, kw, stride,
+                                          padding, dilation, out_spatial)
+    if stride > 1:
+        xd = jnp.zeros((n, (h - 1) * stride + 1, (w_dim - 1) * stride + 1,
+                        c), x.dtype)
+        xd = xd.at[:, ::stride, ::stride, :].set(x)
+    else:
+        xd = x
+    pads = [eq_pads[0][0], eq_pads[0][1], eq_pads[1][0], eq_pads[1][1]]
+    if min(pads) < 0:
+        top, bot, left, right = (max(0, -p) for p in pads)
+        xd = xd[:, top:xd.shape[1] - bot, left:xd.shape[2] - right, :]
+        pads = [max(0, p) for p in pads]
+    return xd, ((pads[0], pads[1]), (pads[2], pads[3]))
+
+
+def conv2d_ws_transpose(x, w, bias=None, out_scale=None, *, stride: int = 1,
+                        padding="VALID", groups: int = 1,
+                        cin_banks: int = 4, kout_banks: int = 4,
+                        h_tile: int = 0, w_tile: int = 0,
+                        relu: bool = False, pool: bool = False,
+                        dilation: int = 1, out_spatial=None,
+                        pipelined: bool = False, interpret: bool = False):
+    """Transposed convolution through the weight-stationary dataflow.
+
+    x: [N,H,W,C]; w: [KH,KW,C/groups,K] (forward layout — the spatial
+    flip is internal); bias: [K] or None → [N,OH,OW,K] with
+    ``ref.conv_transpose_out_shape`` semantics: VALID grows to
+    ``(H−1)·s + ek``, SAME to exactly ``H·s``, explicit pads crop the
+    VALID extent, and ``out_spatial`` pins the output shape (the
+    gradient-duality form — the stride remainder that a forward conv's
+    floor division discarded).
+
+    stride is the OUTPUT growth factor (the lhs zero-insertion rate);
+    ``dilation`` dilates the kernel taps of the equivalent conv.  The
+    epilogue contract (relu / 2×2 pool / requantize), grouped banking,
+    spatial tiling (``h_tile``/``w_tile`` tile the transpose OUTPUT), the
+    int8 datapath, and ``pipelined=`` kernel choice are all inherited
+    unchanged from conv2d_ws / conv2d_ws_pipe.
+    """
+    check_groups(x.shape[3], w.shape[3], groups)
+    kh, kw = w.shape[0], w.shape[1]
+    xd, eq_pads = transpose_eq_conv_inputs(
+        x, kh, kw, stride=stride, padding=padding, dilation=dilation,
+        out_spatial=out_spatial)
+    wt = jnp.flip(w, (0, 1))
+    cb, kb = grouped_banks(x.shape[3], w.shape[3], groups,
+                           want_cin=cin_banks, want_kout=kout_banks)
+    kern = conv2d_ws_pipe if pipelined else conv2d_ws
+    return kern(xd, wt, bias, out_scale, stride=1, padding=eq_pads,
+                groups=groups, cin_banks=cb, kout_banks=kb,
+                h_tile=h_tile, w_tile=w_tile, relu=relu, pool=pool,
+                dilation=dilation, interpret=interpret)

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import conv2d_ws as _conv_mod
 from repro.kernels import conv2d_ws_bwd as _bwd_mod
 from repro.kernels import conv2d_ws_pipe as _pipe_mod
+from repro.kernels import conv2d_ws_trans as _trans_mod
 from repro.kernels import matmul_ws as _mm_mod
 from repro.kernels import ref as _ref
 
@@ -99,6 +100,7 @@ class _ConvCfg(NamedTuple):
     w_tile: int
     relu: bool
     pool: bool
+    dilation: int = 1
     pipelined: bool = False
 
 
@@ -116,7 +118,7 @@ def _conv2d_float(cfg: _ConvCfg, x, w, bias):
                cin_banks=cfg.cin_banks,
                kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
                w_tile=cfg.w_tile, relu=cfg.relu,
-               pool=cfg.pool, interpret=_interpret())
+               pool=cfg.pool, dilation=cfg.dilation, interpret=_interpret())
 
 
 def _conv2d_float_fwd(cfg: _ConvCfg, x, w, bias):
@@ -129,7 +131,8 @@ def _conv2d_float_fwd(cfg: _ConvCfg, x, w, bias):
                               padding=cfg.padding, groups=cfg.groups,
                               cin_banks=cfg.cin_banks,
                               kout_banks=cfg.kout_banks, h_tile=cfg.h_tile,
-                              w_tile=cfg.w_tile, interpret=_interpret())
+                              w_tile=cfg.w_tile, dilation=cfg.dilation,
+                              interpret=_interpret())
     relu_mask = pool_idx = None
     y = acc
     if cfg.relu:
@@ -161,10 +164,10 @@ def _conv2d_float_bwd(cfg: _ConvCfg, res, g):
         dacc, w, x.shape, stride=cfg.stride, padding=cfg.padding,
         groups=cfg.groups, cin_banks=cfg.cin_banks,
         kout_banks=cfg.kout_banks, h_tile=cfg.h_tile, w_tile=cfg.w_tile,
-        interpret=_interpret()).astype(x.dtype)
+        dilation=cfg.dilation, interpret=_interpret()).astype(x.dtype)
     dw = _bwd_mod.conv2d_ws_weight_grad(
         x, dacc, w.shape[0], w.shape[1], stride=cfg.stride,
-        padding=cfg.padding, groups=cfg.groups,
+        padding=cfg.padding, groups=cfg.groups, dilation=cfg.dilation,
         interpret=_interpret()).astype(w.dtype)
     # like _matmul_bwd: reduce in f32, cast only the result to the bias dtype
     db = (jnp.sum(dacc, axis=(0, 1, 2)).astype(bias.dtype)
@@ -179,7 +182,7 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
            groups: int = 1, cin_banks: int = 4, kout_banks: int = 4,
            h_tile: int = 0, w_tile: int = 0, relu: bool = False,
            pool: bool = False, wrap8: bool = False, out_scale=None,
-           pipelined: bool = False):
+           dilation: int = 1, pipelined: bool = False):
     """Paper-dataflow convolution (arbitrary stride / SAME|VALID|explicit
     padding, fused ReLU → 2×2 max-pool → requantize epilogue, halo-aware
     spatial tiling via h_tile/w_tile — 0 = whole map).
@@ -210,6 +213,11 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     float shadow with straight-through fake quantization instead —
     core/training.py).
 
+    ``dilation`` dilates the kernel taps (effective extent
+    ``dilation·(k−1)+1``) — the dense-prediction context-aggregation
+    knob; it threads through padding/halo geometry, both kernel
+    variants, and the custom VJP unchanged.
+
     ``pipelined=True`` routes the layer through ``conv2d_ws_pipe`` (the
     explicit double-buffered manual-DMA kernel) instead of ``conv2d_ws``
     — bit-exact on every path, so this is purely a performance choice;
@@ -228,21 +236,171 @@ def conv2d(x, w, bias=None, *, stride: int = 1, padding="VALID",
     if (out_scale is None and not wrap8
             and jnp.issubdtype(jnp.result_type(x), jnp.floating)):
         pad = _ref.normalize_padding(padding, w.shape[0], w.shape[1],
-                                     stride, x.shape[1], x.shape[2])
+                                     stride, x.shape[1], x.shape[2],
+                                     dilation)
         cfg = _ConvCfg(stride=stride, padding=pad, groups=groups,
                        cin_banks=cin_banks, kout_banks=kout_banks,
                        h_tile=h_tile, w_tile=w_tile, relu=relu, pool=pool,
-                       pipelined=pipelined)
+                       dilation=dilation, pipelined=pipelined)
         return _conv2d_float(cfg, x, w, bias)
     fwd = (_pipe_mod.conv2d_ws_pipe if pipelined else _conv_mod.conv2d_ws)
     out = fwd(x, w, bias, out_scale, stride=stride,
               padding=padding, groups=groups,
               cin_banks=cin_banks, kout_banks=kout_banks,
               h_tile=h_tile, w_tile=w_tile, relu=relu,
-              pool=pool, interpret=_interpret())
+              pool=pool, dilation=dilation, interpret=_interpret())
     if x.dtype == jnp.int8 and wrap8:
         return out.astype(jnp.int8)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Transposed convolution (the dense-prediction upsampling entry point)
+# ---------------------------------------------------------------------------
+
+
+class _ConvTransCfg(NamedTuple):
+    """Hashable static config of one transposed-conv pass.  ``padding`` is
+    pre-resolved to explicit form normalized against the OUTPUT spatial
+    shape ``(out_h, out_w)`` — the forward-conv frame of the transpose
+    duality — so the backward rules need no shape context."""
+    stride: int
+    padding: Tuple[Tuple[int, int], Tuple[int, int]]
+    groups: int
+    cin_banks: int
+    kout_banks: int
+    h_tile: int
+    w_tile: int
+    relu: bool
+    pool: bool
+    dilation: int
+    out_h: int
+    out_w: int
+    pipelined: bool = False
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv2d_transpose_float(cfg: _ConvTransCfg, x, w, bias):
+    return _trans_mod.conv2d_ws_transpose(
+        x, w, bias, None, stride=cfg.stride, padding=cfg.padding,
+        groups=cfg.groups, cin_banks=cfg.cin_banks,
+        kout_banks=cfg.kout_banks, h_tile=cfg.h_tile, w_tile=cfg.w_tile,
+        relu=cfg.relu, pool=cfg.pool, dilation=cfg.dilation,
+        out_spatial=(cfg.out_h, cfg.out_w), pipelined=cfg.pipelined,
+        interpret=_interpret())
+
+
+def _conv2d_transpose_float_fwd(cfg: _ConvTransCfg, x, w, bias):
+    """Epilogue-free transpose exposes the f32 accumulator; ReLU/pool at
+    the jnp level are bit-identical to the fused epilogue and leave only
+    their MASKS as residuals (same scheme as _conv2d_float_fwd)."""
+    acc = _trans_mod.conv2d_ws_transpose(
+        x, w, bias, None, stride=cfg.stride, padding=cfg.padding,
+        groups=cfg.groups, cin_banks=cfg.cin_banks,
+        kout_banks=cfg.kout_banks, h_tile=cfg.h_tile, w_tile=cfg.w_tile,
+        dilation=cfg.dilation, out_spatial=(cfg.out_h, cfg.out_w),
+        interpret=_interpret())
+    relu_mask = pool_idx = None
+    y = acc
+    if cfg.relu:
+        relu_mask = _ref.relu_mask_ref(acc)
+        y = jnp.maximum(y, 0)
+    if cfg.pool:
+        oh, ow = acc.shape[1], acc.shape[2]
+        if oh < 2 or ow < 2:
+            raise ValueError(
+                f"2×2 pool needs a ≥2×2 transpose output, got {oh}×{ow}")
+        pool_idx = _ref.maxpool2x2_argmax_ref(y)
+        y = _ref.maxpool2d_ref(y, 2)
+    return y, (x, w, bias, relu_mask, pool_idx, acc.shape)
+
+
+def _conv2d_transpose_float_bwd(cfg: _ConvTransCfg, res, g):
+    """The transpose duality run in reverse — NO new kernel code:
+
+    * dX = the ORDINARY strided forward conv of the cotangent with the
+      channel-swapped weights (the transpose op is the adjoint of exactly
+      that conv, so its VJP wrt the input is the conv itself);
+    * dW = the channel-swap of the forward weight-grad GEMMs with the
+      cotangent playing the conv INPUT and the primal input playing the
+      conv cotangent (⟨g, Tᵂ x⟩ = ⟨F_w g, x⟩ differentiated in w);
+    * db = the cotangent summed over (N, OH, OW).
+    """
+    x, w, bias, relu_mask, pool_idx, acc_shape = res
+    dacc = g.astype(jnp.float32)
+    if cfg.pool:
+        dacc = _ref.maxpool2x2_bwd_ref(pool_idx, dacc, acc_shape)
+    if cfg.relu:
+        dacc = dacc * relu_mask
+    wf = _ref.grouped_swap_weights(w, cfg.groups).astype(jnp.float32)
+    # the dual conv contracts the transpose's K channels back to C, so
+    # the bank requests re-legalize against (K, C)
+    cb_n, kb_n = _ref.grouped_banks(
+        w.shape[3], x.shape[3], cfg.groups, want_cin=cfg.cin_banks,
+        want_kout=max(cfg.kout_banks, cfg.groups))
+    dx = _conv_mod.conv2d_ws(
+        dacc, wf, None, stride=cfg.stride, padding=cfg.padding,
+        groups=cfg.groups, cin_banks=cb_n, kout_banks=kb_n,
+        h_tile=cfg.h_tile, w_tile=cfg.w_tile, dilation=cfg.dilation,
+        interpret=_interpret()).astype(x.dtype)
+    dwf = _bwd_mod.conv2d_ws_weight_grad(
+        dacc, x.astype(jnp.float32), w.shape[0], w.shape[1],
+        stride=cfg.stride, padding=cfg.padding, groups=cfg.groups,
+        dilation=cfg.dilation, interpret=_interpret())
+    dw = _ref.grouped_swap_weights(dwf, cfg.groups).astype(w.dtype)
+    db = (jnp.sum(dacc, axis=(0, 1, 2)).astype(bias.dtype)
+          if bias is not None else None)
+    return dx, dw, db
+
+
+_conv2d_transpose_float.defvjp(_conv2d_transpose_float_fwd,
+                               _conv2d_transpose_float_bwd)
+
+
+def conv2d_transpose(x, w, bias=None, *, stride: int = 1, padding="VALID",
+                     groups: int = 1, cin_banks: int = 4,
+                     kout_banks: int = 4, h_tile: int = 0, w_tile: int = 0,
+                     relu: bool = False, pool: bool = False, out_scale=None,
+                     dilation: int = 1, out_spatial=None,
+                     pipelined: bool = False):
+    """Transposed convolution through the weight-stationary dataflow
+    (kernels/conv2d_ws_trans.py): lhs zero-insertion by ``stride``,
+    kernel flip, and the stride-1 forward kernel under the "full"-padding
+    equivalence.  x: [N,H,W,C]; w: [KH,KW,C/groups,K] (forward layout) →
+    [N,OH,OW,K] with SAME growing to exactly ``H·stride``, VALID to
+    ``(H−1)·stride + dilation·(k−1)+1``, and ``out_spatial`` pinning the
+    output shape (the gradient-duality form).
+
+    The epilogue contract (``relu`` / 2×2 ``pool`` / ``out_scale``
+    requantize — int8 chained-layer deployment), grouped banking,
+    spatial tiling, and ``pipelined=`` kernel choice all match
+    ``conv2d``.  The float path (no out_scale) is differentiable: the
+    custom VJP is the transpose duality run in reverse — dX is an
+    ordinary strided conv, dW the channel-swapped weight-grad GEMMs — so
+    upsampling layers train through the same paper dataflow.
+    """
+    if groups > 1:
+        cin_banks, kout_banks = _ref.grouped_banks(
+            x.shape[3], w.shape[3], groups, want_cin=cin_banks,
+            want_kout=kout_banks)
+    kh, kw = w.shape[0], w.shape[1]
+    (oh, ow), _ = _ref.conv_transpose_eq_params(
+        x.shape[1], x.shape[2], kh, kw, stride, padding, dilation,
+        out_spatial)
+    pad = _ref.normalize_padding(padding, kh, kw, stride, oh, ow, dilation)
+    if (out_scale is None
+            and jnp.issubdtype(jnp.result_type(x), jnp.floating)):
+        cfg = _ConvTransCfg(stride=stride, padding=pad, groups=groups,
+                            cin_banks=cin_banks, kout_banks=kout_banks,
+                            h_tile=h_tile, w_tile=w_tile, relu=relu,
+                            pool=pool, dilation=dilation, out_h=oh,
+                            out_w=ow, pipelined=pipelined)
+        return _conv2d_transpose_float(cfg, x, w, bias)
+    return _trans_mod.conv2d_ws_transpose(
+        x, w, bias, out_scale, stride=stride, padding=pad, groups=groups,
+        cin_banks=cin_banks, kout_banks=kout_banks, h_tile=h_tile,
+        w_tile=w_tile, relu=relu, pool=pool, dilation=dilation,
+        out_spatial=(oh, ow), pipelined=pipelined, interpret=_interpret())
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

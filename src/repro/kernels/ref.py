@@ -16,13 +16,22 @@ import jax.numpy as jnp
 Padding = Union[str, int, Tuple[Tuple[int, int], Tuple[int, int]]]
 
 
+def dilated_extent(k: int, dilation: int = 1) -> int:
+    """Spatial extent of a dilated kernel: ``dilation·(k−1)+1`` taps apart.
+    Every piece of halo/padding/output-shape math sees the dilated kernel
+    only through this extent, so it is THE shared definition."""
+    return dilation * (k - 1) + 1
+
+
 def normalize_padding(padding: Padding, kh: int, kw: int,
-                      stride: int = 1, h: int = 0, w: int = 0
+                      stride: int = 1, h: int = 0, w: int = 0,
+                      dilation: int = 1
                       ) -> Tuple[Tuple[int, int], Tuple[int, int]]:
     """Resolve SAME/VALID/int/explicit padding to ((top,bottom),(left,right)).
 
     SAME follows the TF/XLA convention: output = ceil(in/stride), with the
-    extra pixel (odd total pad) on the bottom/right."""
+    extra pixel (odd total pad) on the bottom/right; a dilated kernel pads
+    for its effective extent ``dilation·(k−1)+1``."""
     if isinstance(padding, int):
         return ((padding, padding), (padding, padding))
     if isinstance(padding, (tuple, list)):
@@ -33,26 +42,30 @@ def normalize_padding(padding: Padding, kh: int, kw: int,
     if padding == "SAME":
         def same(dim, k):
             out = -(-dim // stride)
-            total = max((out - 1) * stride + k - dim, 0)
+            total = max((out - 1) * stride + dilated_extent(k, dilation)
+                        - dim, 0)
             return (total // 2, total - total // 2)
         return (same(h, kh), same(w, kw))
     raise ValueError(f"unknown padding {padding!r}")
 
 
 def conv_out_shape(h: int, w: int, kh: int, kw: int, stride: int = 1,
-                   padding: Padding = "VALID") -> Tuple[int, int]:
+                   padding: Padding = "VALID",
+                   dilation: int = 1) -> Tuple[int, int]:
     """Spatial output shape of a conv layer (shared by kernel/banking/perf)."""
-    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h, w)
-    return ((h + pt + pb - kh) // stride + 1,
-            (w + pl_ + pr - kw) // stride + 1)
+    (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h, w,
+                                            dilation)
+    return ((h + pt + pb - dilated_extent(kh, dilation)) // stride + 1,
+            (w + pl_ + pr - dilated_extent(kw, dilation)) // stride + 1)
 
 
-def halo_window(tile: int, stride: int, k: int) -> int:
+def halo_window(tile: int, stride: int, k: int, dilation: int = 1) -> int:
     """Input extent consumed by ``tile`` contiguous conv outputs: adjacent
-    windows overlap by ``k − stride`` (the halo).  The single definition
-    shared by the tiled kernel's BlockSpecs, the TilePlan planner, and the
-    spatial-shard band math — they must never disagree on this."""
-    return (tile - 1) * stride + k
+    windows overlap by ``dilation·(k−1)+1 − stride`` (the halo).  The single
+    definition shared by the tiled kernel's BlockSpecs, the TilePlan
+    planner, and the spatial-shard band math — they must never disagree on
+    this."""
+    return (tile - 1) * stride + dilated_extent(k, dilation)
 
 
 def divisor_banks(dim: int, want: int) -> int:
@@ -96,21 +109,24 @@ def check_groups(c: int, k: int, groups: int) -> None:
 
 def conv2d_ref(x, w, bias=None, *, stride: int = 1,
                padding: Padding = "VALID", groups: int = 1,
-               accum_dtype=jnp.float32):
+               dilation: int = 1, accum_dtype=jnp.float32):
     """General convolution oracle.  x: [N,H,W,C]; w: [KH,KW,C/groups,K] →
     [N,OH,OW,K].
 
     The paper's Eq. (2): F(i,j) = Σ_d Σ_m Σ_n I(i·s+m, j·s+n, d) · K(m,n,d),
-    extended with stride s, zero padding, and grouped channel contraction
+    extended with stride s, zero padding, grouped channel contraction
     (``groups > 1``): output kernel k only reads the C/groups input
     channels of its group — ``groups == C`` is the depthwise conv of the
-    MobileNet workload family."""
+    MobileNet workload family — and rhs/kernel dilation (``dilation > 1``
+    spreads the taps ``dilation`` pixels apart, the atrous conv of
+    dense-prediction context modules)."""
     check_groups(x.shape[3], w.shape[3], groups)
     pad = normalize_padding(padding, w.shape[0], w.shape[1], stride,
-                            x.shape[1], x.shape[2])
+                            x.shape[1], x.shape[2], dilation)
     out = jax.lax.conv_general_dilated(
         x.astype(accum_dtype), w.astype(accum_dtype),
         window_strides=(stride, stride), padding=pad,
+        rhs_dilation=(dilation, dilation),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=groups,
         preferred_element_type=accum_dtype)
@@ -120,17 +136,19 @@ def conv2d_ref(x, w, bias=None, *, stride: int = 1,
 
 
 def conv2d_ref_int8(x, w, bias=None, *, stride: int = 1,
-                    padding: Padding = "VALID", groups: int = 1):
+                    padding: Padding = "VALID", groups: int = 1,
+                    dilation: int = 1):
     """int8 × int8 → int32 accumulation (production 8-bit datapath).
 
     Zero padding is exact for the symmetric (zero-point-0) int8 scheme."""
     assert x.dtype == jnp.int8 and w.dtype == jnp.int8
     check_groups(x.shape[3], w.shape[3], groups)
     pad = normalize_padding(padding, w.shape[0], w.shape[1], stride,
-                            x.shape[1], x.shape[2])
+                            x.shape[1], x.shape[2], dilation)
     out = jax.lax.conv_general_dilated(
         x.astype(jnp.int32), w.astype(jnp.int32),
         window_strides=(stride, stride), padding=pad,
+        rhs_dilation=(dilation, dilation),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=groups)
     if bias is not None:
@@ -213,17 +231,17 @@ def add_requant_ref(a, b, scale_a, scale_b, *, relu: bool = False):
 def conv2d_epilogue_ref(x, w, bias=None, *, stride: int = 1,
                         padding: Padding = "VALID", relu: bool = False,
                         pool: bool = False, out_scale=None,
-                        groups: int = 1):
+                        groups: int = 1, dilation: int = 1):
     """Conv + the fused FPGA post-processing chain: ReLU → 2×2 max-pool →
     requantize, in accumulator precision (the oracle for the fused kernel
-    epilogue).  ``groups`` selects grouped/depthwise channel contraction
-    like ``conv2d_ref``."""
+    epilogue).  ``groups``/``dilation`` select grouped/depthwise channel
+    contraction and kernel dilation like ``conv2d_ref``."""
     if x.dtype == jnp.int8:
         acc = conv2d_ref_int8(x, w, bias, stride=stride, padding=padding,
-                              groups=groups)
+                              groups=groups, dilation=dilation)
     else:
         acc = conv2d_ref(x, w, bias, stride=stride, padding=padding,
-                         groups=groups)
+                         groups=groups, dilation=dilation)
     if relu:
         acc = jnp.maximum(acc, 0)
     if pool:
@@ -243,61 +261,197 @@ def conv2d_ref_wrap8(x, w, bias=None):
 
 
 # ---------------------------------------------------------------------------
+# Transposed-convolution oracles (the dense-prediction contract)
+# ---------------------------------------------------------------------------
+
+
+def grouped_swap_weights(w, groups: int = 1):
+    """Per-group channel-axis swap [KH,KW,C/groups,K] → [KH,KW,K/groups,C]
+    with the groups reassembled along the new output axis — NO spatial
+    flip.  An involution (applying it twice is the identity), and the
+    algebraic half of ``grouped_transpose_weights = flip ∘ swap``: it maps
+    the weights of a ``conv2d_transpose`` to the weights of the ordinary
+    strided conv that is its adjoint (and vice versa), which is how the
+    transpose op's own VJP reuses the forward kernels."""
+    kh, kw, cg, k = w.shape
+    kg = k // groups
+    if groups == 1:
+        return w.swapaxes(2, 3)
+    return (w.reshape(kh, kw, cg, groups, kg)
+            .transpose(0, 1, 4, 3, 2).reshape(kh, kw, kg, groups * cg))
+
+
+def conv_transpose_out_shape(h: int, w: int, kh: int, kw: int,
+                             stride: int = 1, padding: Padding = "VALID",
+                             dilation: int = 1) -> Tuple[int, int]:
+    """Spatial output shape of ``conv2d_transpose_ref``: the padding names
+    the FORWARD conv being inverted, so the output extent is the input
+    extent that forward conv would have consumed — VALID grows to
+    ``(h−1)·s + ek`` (ek the dilated kernel extent), SAME to exactly
+    ``h·s``, explicit ((pt,pb),(pl,pr)) to ``(h−1)·s + ek − pt − pb``."""
+    (oh, ow), _ = conv_transpose_eq_params(h, w, kh, kw, stride, padding,
+                                           dilation)
+    return oh, ow
+
+
+def conv_transpose_eq_params(h: int, w: int, kh: int, kw: int,
+                             stride: int = 1, padding: Padding = "VALID",
+                             dilation: int = 1, out_spatial=None):
+    """The shared geometry of a transposed conv as its equivalent stride-1
+    conv: resolve the output extent (OH, OW) and the "full" padding the
+    zero-inserted input needs — ``ek−1−pt`` on top, ``OH+pt−(h−1)·s−1`` on
+    the bottom (negative when the forward padding exceeded the kernel
+    extent: those rows must be sliced away, not padded).  One definition
+    consumed by the oracle, the WS kernel path, and the planner, so they
+    can never disagree on transpose geometry.
+
+    ``out_spatial`` pins (OH, OW) directly — the input-gradient use, where
+    the forward input extent is known and the stride remainder rows
+    (``r = OH+pt+pb−ek−(h−1)·s ∈ [0, s)``) must be recovered exactly."""
+    ekh, ekw = dilated_extent(kh, dilation), dilated_extent(kw, dilation)
+    if out_spatial is not None:
+        oh, ow = out_spatial
+        (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
+                                                oh, ow, dilation)
+    elif isinstance(padding, (int, tuple, list)):
+        (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride)
+        oh = (h - 1) * stride + ekh - pt - pb
+        ow = (w - 1) * stride + ekw - pl_ - pr
+    elif padding == "VALID":
+        (pt, pb), (pl_, pr) = (0, 0), (0, 0)
+        oh, ow = (h - 1) * stride + ekh, (w - 1) * stride + ekw
+    elif padding == "SAME":
+        oh, ow = h * stride, w * stride
+        (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride,
+                                                oh, ow, dilation)
+    else:
+        raise ValueError(f"unknown padding {padding!r}")
+    for dim, o, p0, p1, ek in ((h, oh, pt, pb, ekh), (w, ow, pl_, pr, ekw)):
+        r = o + p0 + p1 - ek - (dim - 1) * stride
+        if o < 1 or not 0 <= r < max(stride, 1):
+            raise ValueError(
+                f"conv_transpose geometry is not invertible: input {dim} "
+                f"with stride={stride}, kernel extent {ek}, padding "
+                f"({p0},{p1}) cannot produce output extent {o}")
+    eq_pads = ((ekh - 1 - pt, oh + pt - (h - 1) * stride - 1),
+               (ekw - 1 - pl_, ow + pl_ - (w - 1) * stride - 1))
+    return (oh, ow), eq_pads
+
+
+def conv2d_transpose_ref(x, w, bias=None, *, stride: int = 1,
+                         padding: Padding = "VALID", groups: int = 1,
+                         dilation: int = 1, out_spatial=None,
+                         accum_dtype=jnp.float32):
+    """Transposed (fractionally-strided / upsampling) convolution oracle.
+    x: [N,H,W,C]; w: [KH,KW,C/groups,K] → [N,OH,OW,K] — the FORWARD weight
+    layout, so an encoder conv and its decoder transpose read the same
+    shaped parameter.
+
+    Stated directly as zero-insertion dilation + kernel flip (NOT via
+    jax.vjp, so it is an independent contract for the WS kernel path): the
+    input dilates by ``stride`` (lhs zero-insertion), the kernel flips
+    spatially, and a stride-1 grouped correlation with the "full" padding
+    of ``conv_transpose_eq_params`` produces the upsampled map.  Duality:
+    ``conv2d_input_grad_ref`` is exactly this op applied to the cotangent
+    with per-group channel-swapped weights (``grouped_swap_weights``)."""
+    check_groups(x.shape[3], w.shape[3], groups)
+    kh, kw = w.shape[0], w.shape[1]
+    _, eq_pads = conv_transpose_eq_params(
+        x.shape[1], x.shape[2], kh, kw, stride, padding, dilation,
+        out_spatial)
+    out = jax.lax.conv_general_dilated(
+        x.astype(accum_dtype), jnp.flip(w, (0, 1)).astype(accum_dtype),
+        (1, 1), eq_pads, lhs_dilation=(stride, stride),
+        rhs_dilation=(dilation, dilation),
+        feature_group_count=groups,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=accum_dtype)
+    if bias is not None:
+        out = out + bias.astype(accum_dtype)
+    return out
+
+
+def conv2d_transpose_ref_int8(x, w, bias=None, *, stride: int = 1,
+                              padding: Padding = "VALID", groups: int = 1,
+                              dilation: int = 1, out_spatial=None):
+    """int8 × int8 → int32 transposed conv (production 8-bit datapath).
+    Zero insertion is exact for the symmetric (zero-point-0) scheme — the
+    inserted zeros ARE the quantized zero."""
+    assert x.dtype == jnp.int8 and w.dtype == jnp.int8
+    return conv2d_transpose_ref(x, w, bias, stride=stride, padding=padding,
+                                groups=groups, dilation=dilation,
+                                out_spatial=out_spatial,
+                                accum_dtype=jnp.int32)
+
+
+def conv2d_transpose_epilogue_ref(x, w, bias=None, *, stride: int = 1,
+                                  padding: Padding = "VALID",
+                                  relu: bool = False, pool: bool = False,
+                                  out_scale=None, groups: int = 1,
+                                  dilation: int = 1):
+    """Transposed conv + the same fused post-processing chain as
+    ``conv2d_epilogue_ref`` (ReLU → 2×2 max-pool → requantize) — the
+    oracle for a first-class ``conv_transpose`` network layer."""
+    if x.dtype == jnp.int8:
+        acc = conv2d_transpose_ref_int8(x, w, bias, stride=stride,
+                                        padding=padding, groups=groups,
+                                        dilation=dilation)
+    else:
+        acc = conv2d_transpose_ref(x, w, bias, stride=stride,
+                                   padding=padding, groups=groups,
+                                   dilation=dilation)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if pool:
+        acc = maxpool2d_ref(acc)
+    if out_scale is not None:
+        return requantize_ref(acc, out_scale)
+    return acc
+
+
+# ---------------------------------------------------------------------------
 # Backward-pass oracles (the training contract)
 # ---------------------------------------------------------------------------
 
 
 def grouped_transpose_weights(w, groups: int = 1):
     """Forward weights [KH,KW,C/groups,K] → transposed-conv weights
-    [KH,KW,K/groups,C]: spatial flip + per-group channel-axis swap, groups
-    reassembled along the new output axis.  The single definition shared
-    by the input-gradient oracle and the WS backward kernel — in the
-    transposed conv the cotangent's K channels play the input role (K/g
-    per group) and the forward input's C channels the output role."""
-    kh, kw, cg, k = w.shape
-    kg = k // groups
-    wt = jnp.flip(w, (0, 1))
-    if groups == 1:
-        return wt.swapaxes(2, 3)
-    return (wt.reshape(kh, kw, cg, groups, kg)
-            .transpose(0, 1, 4, 3, 2).reshape(kh, kw, kg, groups * cg))
+    [KH,KW,K/groups,C]: spatial flip + per-group channel-axis swap
+    (``grouped_swap_weights``), groups reassembled along the new output
+    axis.  The single definition shared by the input-gradient oracle and
+    the WS backward kernel — in the transposed conv the cotangent's K
+    channels play the input role (K/g per group) and the forward input's
+    C channels the output role."""
+    return grouped_swap_weights(jnp.flip(w, (0, 1)), groups)
 
 
 def conv2d_input_grad_ref(g, w, x_shape, *, stride: int = 1,
-                          padding: Padding = "VALID", groups: int = 1):
-    """dL/dx of ``conv2d_ref``: the transposed convolution, stated directly
-    as zero-insertion dilation + kernel flip (NOT via jax.vjp, so it is an
-    independent contract for the WS backward kernel).
-
-    The cotangent ``g`` [N,OH,OW,K] dilates by the forward stride
-    (zero-insertion), the kernel flips spatially and swaps its channel
-    axes per group ([KH,KW,C/g,K] → [KH,KW,K/g,C] —
-    ``grouped_transpose_weights``), and a stride-1 grouped correlation
-    with "full" padding (kh−1−pt on top, h+pt−(oh−1)·s−1 on the bottom —
-    rows the strided forward never reached get negative padding) recovers
-    [N,H,W,C]."""
+                          padding: Padding = "VALID", groups: int = 1,
+                          dilation: int = 1):
+    """dL/dx of ``conv2d_ref``: a special case of the first-class
+    transposed conv — ``conv2d_transpose_ref`` applied to the cotangent
+    with per-group channel-swapped weights ([KH,KW,C/g,K] → [KH,KW,K/g,C],
+    ``grouped_swap_weights``; the transpose op supplies the spatial flip),
+    with ``out_spatial`` pinned to the forward input extent so the stride
+    remainder rows the strided forward never reached are recovered."""
     n, h, w_dim, c = x_shape
     kh, kw, cg, k = w.shape
     assert c == cg * groups, (c, cg, groups)
-    (pt, _), (pl_, _) = normalize_padding(padding, kh, kw, stride, h, w_dim)
-    oh, ow = g.shape[1], g.shape[2]
-    wt = grouped_transpose_weights(w, groups)
-    return jax.lax.conv_general_dilated(
-        g.astype(jnp.float32), wt.astype(jnp.float32), (1, 1),
-        ((kh - 1 - pt, h + pt - (oh - 1) * stride - 1),
-         (kw - 1 - pl_, w_dim + pl_ - (ow - 1) * stride - 1)),
-        lhs_dilation=(stride, stride),
-        feature_group_count=groups,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return conv2d_transpose_ref(
+        g.astype(jnp.float32),
+        grouped_swap_weights(w, groups).astype(jnp.float32),
+        stride=stride, padding=padding, groups=groups, dilation=dilation,
+        out_spatial=(h, w_dim))
 
 
 def conv2d_weight_grad_ref(x, g, kh: int, kw: int, *, stride: int = 1,
-                           padding: Padding = "VALID", groups: int = 1):
+                           padding: Padding = "VALID", groups: int = 1,
+                           dilation: int = 1):
     """dL/dw of ``conv2d_ref``: a batched correlation — tap (dy,dx) of the
     weight gradient contracts the stride-strided input window starting at
-    (dy,dx) with the cotangent over (N,OH,OW):
+    (dy·dilation, dx·dilation) with the cotangent over (N,OH,OW):
 
-        dW[dy,dx,c,k] = Σ_{n,i,j} x_pad[n, i·s+dy, j·s+dx, c] · g[n,i,j,k]
+        dW[dy,dx,c,k] = Σ_{n,i,j} x_pad[n, i·s+dy·d, j·s+dx·d, c] · g[n,i,j,k]
 
     With ``groups > 1`` the contraction stays within each group: output
     kernel k in group i only ever saw that group's C/g input channels, so
@@ -308,7 +462,7 @@ def conv2d_weight_grad_ref(x, g, kh: int, kw: int, *, stride: int = 1,
     check_groups(c, k, groups)
     cg, kg = c // groups, k // groups
     (pt, pb), (pl_, pr) = normalize_padding(padding, kh, kw, stride, h,
-                                            w_dim)
+                                            w_dim, dilation)
     xp = jnp.pad(x.astype(jnp.float32),
                  ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
     gf = g.astype(jnp.float32)
@@ -316,8 +470,9 @@ def conv2d_weight_grad_ref(x, g, kh: int, kw: int, *, stride: int = 1,
     for dy in range(kh):
         for dx in range(kw):
             xs = jax.lax.slice(
-                xp, (0, dy, dx, 0),
-                (n, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1,
+                xp, (0, dy * dilation, dx * dilation, 0),
+                (n, dy * dilation + (oh - 1) * stride + 1,
+                 dx * dilation + (ow - 1) * stride + 1,
                  c), (1, stride, stride, 1))
             if groups == 1:
                 taps.append(jnp.einsum("nijc,nijk->ck", xs, gf))

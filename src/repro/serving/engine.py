@@ -135,20 +135,45 @@ class ConvNetEngine:
     cores (core/scheduler.py — the scheduler pads ragged batches itself,
     so ``batch`` need not divide by the core count).  ``submit`` is
     synchronous microbatching — the conv analogue of the LM engine's
-    lockstep step."""
+    lockstep step.
+
+    ``tune`` (a core/autotune.NetworkTunePlan) deploys an autotuned
+    recipe end-to-end: its per-layer ``tile_plans`` thread into the
+    compiled program, and its winning (scheduler mode × core count)
+    verdict replaces ``n_cores`` — kout/spatial verdicts compile the
+    program against the matching sharded backend, batch verdicts shard
+    ``submit``'s microbatches.  Without ``tune`` the engine runs the
+    greedy plans on ``n_cores`` batch cores, exactly as before."""
 
     def __init__(self, qnet, *, batch: int = 8, n_cores: int = 1,
-                 backend: str = "pallas"):
-        from repro.core.convcore import ConvCoreConfig
+                 backend: str = "pallas", tune=None):
+        from repro.core.convcore import ConvCoreConfig, register_backend
         from repro.core.network import make_int8_program
         from repro.core.scheduler import MultiCoreScheduler, SchedulerConfig
 
         self.qnet = qnet
         self.batch = batch
         self.input_shape = qnet.plan.input_shape
+        self.tune = tune
+        tile_plans = None
+        if tune is not None:
+            if tune.network != qnet.plan.name:
+                raise ValueError(
+                    f"tune plan is for network {tune.network!r}, "
+                    f"engine serves {qnet.plan.name!r}")
+            tile_plans = tune.tile_plans
+            self._sched = MultiCoreScheduler.from_tune(tune)
+            if self._sched.config.mode in ("kout", "spatial"):
+                # single-image latency modes: the cores live INSIDE the
+                # program as a sharded backend, not around the batch
+                sb = self._sched.shard_backend(backend)
+                register_backend(sb)
+                backend = sb.name
+        else:
+            self._sched = MultiCoreScheduler(SchedulerConfig(n_cores=n_cores))
         self._program = make_int8_program(
-            qnet, ConvCoreConfig(backend=backend, int8=True))
-        self._sched = MultiCoreScheduler(SchedulerConfig(n_cores=n_cores))
+            qnet, ConvCoreConfig(backend=backend, int8=True),
+            tile_plans=tile_plans)
         self.stats = {"requests": 0, "batches": 0, "padded": 0}
 
     def submit(self, images) -> np.ndarray:
