@@ -38,6 +38,34 @@ class Timing(float):
         return {"median_us": self.median_us, "min_us": self.min_us,
                 "iqr_us": self.iqr_us, "samples_us": list(self.samples_us)}
 
+    def to_histogram(self, name: str):
+        """Feed the samples into an obs histogram (global registry) and
+        return it — the bridge from one-shot bench timings to the
+        percentile machinery serving uses."""
+        from repro import obs
+        h = obs.metrics.histogram(name)
+        for s in self.samples_us:
+            h.observe(s)
+        return h
+
+    def percentiles(self) -> dict:
+        """Exact p50/p90/p99 over the raw samples (no bucketing — bench
+        runs hold every sample, unlike the serving histograms)."""
+        times = self.samples_us
+        n = len(times)
+
+        def pct(p):
+            if n == 1:
+                return times[0]
+            # linear interpolation between closest ranks
+            x = (p / 100.0) * (n - 1)
+            lo = int(x)
+            hi = min(lo + 1, n - 1)
+            return times[lo] + (times[hi] - times[lo]) * (x - lo)
+
+        return {"count": n, "p50": pct(50), "p90": pct(90),
+                "p99": pct(99), "min": times[0], "max": times[-1]}
+
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> Timing:
     """Median wall-time per call in microseconds (blocks on results).
@@ -55,3 +83,11 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> Timing:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+    from repro import obs
+    if obs.enabled():
+        h = obs.metrics.histogram(f"bench.{name}")
+        if isinstance(us, Timing):
+            for s in us.samples_us:
+                h.observe(s)
+        else:
+            h.observe(float(us))

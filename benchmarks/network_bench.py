@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_util import emit, time_fn
+from repro import obs
 from repro.core import autotune, network, training
 from repro.core.calibration import load_table, sample_from_plan
 from repro.core.convcore import ConvCoreConfig
@@ -122,7 +123,11 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
     # drift from the measured run
     tile_plans = network.program_tile_plans(plan, cfg)
     program = network.make_int8_program(qnet, cfg, tile_plans=tile_plans)
-    us = time_fn(lambda: program(x), iters=iters, warmup=warmup)
+    with obs.span("bench.network", network=plan.name, batch=batch,
+                  iters=iters):
+        us = time_fn(lambda: program(x), iters=iters, warmup=warmup)
+    if obs.enabled():
+        us.to_histogram(f"bench.network_us.{plan.name}")
 
     n_layers = len(plan.layers)
     rep = plan.perf_report(tile_plans=tile_plans)
@@ -190,6 +195,9 @@ def _bench_plan(plan: network.NetworkPlan, rng, batch: int = BATCH,
         "grouped_layers": grouped_layers,
         "dma_bound_board_layers": dma_bound,
         "pipelined_layers": pipelined_layers,
+        # exact percentiles over the raw timing samples (additive; the
+        # top-level latency_percentiles section aggregates these per net)
+        "latency_percentiles": us.percentiles(),
     }
 
 
@@ -367,6 +375,22 @@ def _bench_train(plan: network.NetworkPlan, rng, batch: int = BATCH,
     }
 
 
+def _latency_section(results) -> dict:
+    """Top-level p50/p90/p99 per zoo network (schema-additive)."""
+    return {r["name"]: r["latency_percentiles"] for r in results}
+
+
+def _dump_obs():
+    """With REPRO_OBS=1 (or obs.enable()), write the Chrome trace +
+    metrics JSONL next to the bench output (REPRO_OBS_DIR overrides)."""
+    if not obs.enabled():
+        return
+    paths = obs.dump(os.environ.get("REPRO_OBS_DIR", "."), prefix="bench")
+    if paths:
+        emit("obs/trace", 0.0, f"path={paths['trace']}")
+        emit("obs/metrics", 0.0, f"path={paths['metrics']}")
+
+
 def run(smoke: bool = False, train: bool = False):
     rng = np.random.default_rng(3)
     if smoke:
@@ -411,11 +435,13 @@ def run(smoke: bool = False, train: bool = False):
                        "calibration": (CALIB.to_dict()
                                        if CALIB is not None else None),
                        "networks": results,
+                       "latency_percentiles": _latency_section(results),
                        "pipeline": pipe_rows,
                        "measured_vs_predicted": mvp}
             with open(OUT_PATH, "w") as f:
                 json.dump(payload, f, indent=2)
             emit("network/json", 0.0, f"path={OUT_PATH}")
+        _dump_obs()
         return
     results = [_bench_plan(network.lenet(), rng),
                _bench_plan(network.vgg_small(), rng),
@@ -442,7 +468,8 @@ def run(smoke: bool = False, train: bool = False):
                # first, or set CALIBRATION_JSON, for calibrated rows)
                "calibration": (CALIB.to_dict() if CALIB is not None
                                else None),
-               "networks": results}
+               "networks": results,
+               "latency_percentiles": _latency_section(results)}
     # model-accuracy tracking: per-layer measured vs calibrated-predicted
     # wall time.  large_map is deliberately skipped — interpret-mode
     # timing of its tiled layers is minutes per row; its model columns in
@@ -484,6 +511,7 @@ def run(smoke: bool = False, train: bool = False):
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     emit("network/json", 0.0, f"path={OUT_PATH}")
+    _dump_obs()
 
 
 if __name__ == "__main__":

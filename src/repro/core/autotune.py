@@ -37,6 +37,7 @@ import math
 from dataclasses import dataclass, replace
 from typing import List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core import banking, perfmodel
 from repro.core.banking import TilePlan
 from repro.kernels.ref import check_groups, conv_out_shape, grouped_banks
@@ -192,16 +193,26 @@ def autotune_layer(h: int, w: int, c: int, k: int, kh: int = 3, kw: int = 3,
                 plan.pipelined, plan.h_tile, plan.w_tile)
 
     best_plan, best_key = greedy, key(greedy, greedy_cost)
-    for th, tw, cbn, kbn in candidate_states(oh, ow, cgrp, k, groups, pool):
-        cand = build(th, tw, cbn, kbn)
-        if vmem_budget is not None and not cand.fits_vmem:
-            continue
-        seq, pipe = _variant_cost(cand, psums, cfg, calib)
-        for pipelined, cost in ((False, seq), (True, pipe)):
-            p = replace(cand, pipelined=pipelined)
-            k_ = key(p, cost)
-            if k_ < best_key:
-                best_plan, best_key = p, k_
+    n_cands = 0
+    with obs.span("autotune.layer", layer=name, psums=psums):
+        for th, tw, cbn, kbn in candidate_states(oh, ow, cgrp, k, groups,
+                                                 pool):
+            # per-candidate evaluation span: pruned candidates never get
+            # one (they were never priced) — gated so the disabled path
+            # costs one branch per candidate
+            cand = build(th, tw, cbn, kbn)
+            if vmem_budget is not None and not cand.fits_vmem:
+                continue
+            n_cands += 1
+            with obs.span("autotune.candidate", layer=name, h_tile=th,
+                          w_tile=tw, cin_banks=cbn, kout_banks=kbn):
+                seq, pipe = _variant_cost(cand, psums, cfg, calib)
+                for pipelined, cost in ((False, seq), (True, pipe)):
+                    p = replace(cand, pipelined=pipelined)
+                    k_ = key(p, cost)
+                    if k_ < best_key:
+                        best_plan, best_key = p, k_
+    obs.metrics.counter("autotune.candidates").inc(n_cands)
     return LayerTune(name=name, plan=best_plan, cycles=best_key[0],
                      greedy_plan=greedy, greedy_cycles=greedy_cost,
                      psums=psums, k=k, groups=groups)
@@ -392,11 +403,13 @@ def autotune_network(plan, cin_banks: int = 4, kout_banks: int = 4,
     total = sum(lt.cycles for lt in tunes)
     greedy_total = sum(lt.greedy_cycles for lt in tunes)
     best = ("batch", 1, schedule_cycles(tunes, "batch", 1, cfg, calib))
-    for mode in modes:
-        for cores in sorted(core_counts):
-            cyc = schedule_cycles(tunes, mode, cores, cfg, calib)
-            if cyc < best[2]:
-                best = (mode, cores, cyc)
+    with obs.span("autotune.schedule_sweep", network=plan.name):
+        for mode in modes:
+            for cores in sorted(core_counts):
+                with obs.span("autotune.schedule", mode=mode, cores=cores):
+                    cyc = schedule_cycles(tunes, mode, cores, cfg, calib)
+                if cyc < best[2]:
+                    best = (mode, cores, cyc)
     return NetworkTunePlan(
         network=plan.name, layers=tuple(tunes),
         scheduler_mode=best[0], n_cores=best[1],

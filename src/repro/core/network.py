@@ -764,6 +764,79 @@ def quantize_network(plan: NetworkPlan, params: Sequence[Optional[dict]],
                             merge_scales=tuple(merges))
 
 
+def int8_forward(qnet: QuantizedNetwork, x: jax.Array, *, backend,
+                 tile_plans: Sequence, node_hook=None) -> jax.Array:
+    """The int8 forward walk of ``make_int8_program`` as a plain
+    function: quantize the input onto the calibrated grid, execute every
+    node in topological order through ``backend``, return the final
+    activation.  This is the SINGLE definition of int8 node semantics —
+    ``make_int8_program`` jits it, and the per-layer profiler
+    (obs/profile.py) calls it EAGERLY with a ``node_hook`` so each
+    node's output can be block_until_ready'd and wall-clocked
+    individually (the layer-at-a-time walk the paper's single IP core
+    performs is exactly this loop).
+
+    ``node_hook(i, name, spec, activation)`` is called after each node
+    computes; under ``jax.jit`` the hook only fires at trace time, so
+    the compiled path must pass None (the compiler enforces nothing —
+    profiling a jitted program through the hook is simply meaningless,
+    not unsafe)."""
+    plan = qnet.plan
+    ins = plan.resolved_inputs()
+    geoms = plan.conv_geometries()     # resolved (features, groups)
+    merges = qnet.merge_scales or (None,) * len(plan.layers)
+    names = plan.node_names() if node_hook is not None else None
+    qin = jnp.clip(jnp.round(x.astype(jnp.float32) / qnet.in_scale),
+                   -128, 127).astype(jnp.int8)
+    acts: List[jax.Array] = []
+    for i, (sp, w, b, rq, ms, tp) in enumerate(zip(
+            plan.layers, qnet.weights, qnet.biases, qnet.requants,
+            merges, tile_plans)):
+        src = [qin if j < 0 else acts[j] for j in ins[i]]
+        h = src[0]
+        if sp.kind in ("conv", "conv_transpose"):
+            op = (backend.conv_transpose if sp.kind == "conv_transpose"
+                  else backend.conv)
+            h = op(h, w, b, stride=sp.stride,
+                   padding=sp.padding, groups=geoms[i][1],
+                   dilation=sp.dilation,
+                   relu=sp.relu, pool=sp.pool, out_scale=rq,
+                   plan=tp)
+            if rq is None:                       # final conv: dequantize
+                h = h.astype(jnp.float32) * qnet.out_dequant
+        elif sp.kind == "pool":
+            # max-pool commutes with the monotone int8 mapping
+            h = ref.maxpool2d_ref(h, sp.size)
+        elif sp.kind == "avgpool":
+            # window mean rounds back onto the same int8 grid
+            h = ref.avgpool2d_ref(h, sp.size)
+        elif sp.kind == "globalpool":
+            h = ref.global_avgpool_ref(h)
+        elif sp.kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+        elif sp.kind == "dense":
+            acc = backend.matmul(h, w, b)        # int32
+            if sp.relu:
+                acc = jnp.maximum(acc, 0)
+            if rq is None:
+                h = acc.astype(jnp.float32) * qnet.out_dequant
+            else:
+                h = ref.requantize_ref(acc, rq)
+        elif sp.kind == "add":
+            # int32-free residual add: both branches requantize onto
+            # the merge node's shared int8 grid, then saturating add
+            h = ref.add_requant_ref(src[0], src[1], ms[0], ms[1],
+                                    relu=sp.relu)
+        elif sp.kind == "concat":
+            h = jnp.concatenate(
+                [ref.requantize_ref(s, m) for s, m in zip(src, ms)],
+                axis=-1)
+        acts.append(h)
+        if node_hook is not None:
+            node_hook(i, names[i], sp, h)
+    return acts[-1]
+
+
 def make_int8_program(qnet: QuantizedNetwork,
                       core_config: ConvCoreConfig = ConvCoreConfig(int8=True),
                       tile_plans: Optional[Sequence] = None):
@@ -791,8 +864,6 @@ def make_int8_program(qnet: QuantizedNetwork,
     core_config)`` to share the exact plans with reporting code."""
     backend = get_backend(core_config.backend)
     plan = qnet.plan
-    ins = plan.resolved_inputs()
-    geoms = plan.conv_geometries()     # resolved (features, groups)
     merges = qnet.merge_scales or (None,) * len(plan.layers)
     if tile_plans is None:
         tile_plans = program_tile_plans(plan, core_config)
@@ -806,53 +877,7 @@ def make_int8_program(qnet: QuantizedNetwork,
                          f"({len(plan.layers)}), got {len(merges)}")
 
     def program(x: jax.Array) -> jax.Array:
-        qin = jnp.clip(jnp.round(x.astype(jnp.float32) / qnet.in_scale),
-                       -128, 127).astype(jnp.int8)
-        acts: List[jax.Array] = []
-        for i, (sp, w, b, rq, ms, tp) in enumerate(zip(
-                plan.layers, qnet.weights, qnet.biases, qnet.requants,
-                merges, tile_plans)):
-            src = [qin if j < 0 else acts[j] for j in ins[i]]
-            h = src[0]
-            if sp.kind in ("conv", "conv_transpose"):
-                op = (backend.conv_transpose if sp.kind == "conv_transpose"
-                      else backend.conv)
-                h = op(h, w, b, stride=sp.stride,
-                       padding=sp.padding, groups=geoms[i][1],
-                       dilation=sp.dilation,
-                       relu=sp.relu, pool=sp.pool, out_scale=rq,
-                       plan=tp)
-                if rq is None:                       # final conv: dequantize
-                    h = h.astype(jnp.float32) * qnet.out_dequant
-            elif sp.kind == "pool":
-                # max-pool commutes with the monotone int8 mapping
-                h = ref.maxpool2d_ref(h, sp.size)
-            elif sp.kind == "avgpool":
-                # window mean rounds back onto the same int8 grid
-                h = ref.avgpool2d_ref(h, sp.size)
-            elif sp.kind == "globalpool":
-                h = ref.global_avgpool_ref(h)
-            elif sp.kind == "flatten":
-                h = h.reshape(h.shape[0], -1)
-            elif sp.kind == "dense":
-                acc = backend.matmul(h, w, b)        # int32
-                if sp.relu:
-                    acc = jnp.maximum(acc, 0)
-                if rq is None:
-                    h = acc.astype(jnp.float32) * qnet.out_dequant
-                else:
-                    h = ref.requantize_ref(acc, rq)
-            elif sp.kind == "add":
-                # int32-free residual add: both branches requantize onto
-                # the merge node's shared int8 grid, then saturating add
-                h = ref.add_requant_ref(src[0], src[1], ms[0], ms[1],
-                                        relu=sp.relu)
-            elif sp.kind == "concat":
-                h = jnp.concatenate(
-                    [ref.requantize_ref(s, m) for s, m in zip(src, ms)],
-                    axis=-1)
-            acts.append(h)
-        return acts[-1]
+        return int8_forward(qnet, x, backend=backend, tile_plans=tile_plans)
 
     return jax.jit(program)
 

@@ -40,6 +40,7 @@ from dataclasses import dataclass, replace
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.banking import divisor_banks
 from repro.core.convcore import Backend, get_backend
 from repro.kernels.ref import conv_out_shape, halo_window, normalize_padding
@@ -282,21 +283,33 @@ class MultiCoreScheduler:
         crashing (the fabric doesn't care what's in an idle core's BRAMs).
 
         With enough local devices, one device per IP core (NamedSharding +
-        GSPMD); otherwise vmapped virtual cores on one device."""
+        GSPMD); otherwise vmapped virtual cores on one device.
+
+        Each run is an ``sched.run`` trace span (mode, cores, batch,
+        virtual-vs-device) when obs is enabled — the per-core/mode
+        breakdown the full-board utilization story needs."""
         cores = self.config.n_cores
         n = x.shape[0]
         if cores == 1 or self.config.mode in ("kout", "spatial"):
-            return program(x)
+            # kout/spatial: the cores live INSIDE the program (sharded
+            # backend); the span still attributes the pass to the mode
+            with obs.span("sched.run", mode=self.config.mode, cores=cores,
+                          batch=n):
+                return program(x)
         pad = -n % cores
         if pad:
             x = jnp.concatenate(
                 [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
         if jax.device_count() >= cores:
             from jax.sharding import NamedSharding, PartitionSpec as P
-            mesh = jax.make_mesh((cores,), ("cores",),
-                                 devices=jax.devices()[:cores])
-            x = jax.device_put(x, NamedSharding(mesh, P("cores")))
-            return program(x)[:n]
-        xs = x.reshape(cores, (n + pad) // cores, *x.shape[1:])
-        ys = jax.vmap(program)(xs)
-        return ys.reshape(n + pad, *ys.shape[2:])[:n]
+            with obs.span("sched.run", mode="batch", cores=cores, batch=n,
+                          padded=pad, virtual=False):
+                mesh = jax.make_mesh((cores,), ("cores",),
+                                     devices=jax.devices()[:cores])
+                x = jax.device_put(x, NamedSharding(mesh, P("cores")))
+                return program(x)[:n]
+        with obs.span("sched.run", mode="batch", cores=cores, batch=n,
+                      padded=pad, virtual=True):
+            xs = x.reshape(cores, (n + pad) // cores, *x.shape[1:])
+            ys = jax.vmap(program)(xs)
+            return ys.reshape(n + pad, *ys.shape[2:])[:n]

@@ -213,6 +213,9 @@ def fit(plan: NetworkPlan, x: jax.Array, y: jax.Array, *, steps: int,
         ) -> Tuple[TrainState, List[dict]]:
     """Minibatch training loop (uniform sampling with replacement).
     Returns the final state and the per-step metric history."""
+    import time
+
+    from repro import obs
     rng = np.random.default_rng(seed)
     if state is None:
         state = init_train_state(plan, rng)
@@ -221,10 +224,24 @@ def fit(plan: NetworkPlan, x: jax.Array, y: jax.Array, *, steps: int,
     y = jnp.asarray(y)
     history: List[dict] = []
     n = x.shape[0]
-    for _ in range(steps):
-        idx = rng.integers(0, n, size=batch)
-        state, metrics = step_fn(state, x[idx], y[idx])
-        history.append({k: float(v) for k, v in metrics.items()})
+    # telemetry: monotonic per-step wall time into the shared histogram
+    # type (p50/p90/p99), images/sec as a gauge — observation is cheap
+    # enough to keep on unconditionally; spans only when obs is enabled
+    step_us = obs.metrics.histogram(f"train.step_us.{plan.name}")
+    ips = obs.metrics.gauge(f"train.images_per_s.{plan.name}")
+    with obs.span("train.fit", network=plan.name, steps=steps, batch=batch,
+                  qat=cfg.qat):
+        for i in range(steps):
+            idx = rng.integers(0, n, size=batch)
+            with obs.span("train.step", step=i):
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, x[idx], y[idx])
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.perf_counter() - t0
+            step_us.observe(dt * 1e6)
+            if dt > 0:
+                ips.set(batch / dt)
+            history.append(metrics)
     return state, history
 
 

@@ -143,10 +143,26 @@ class ConvNetEngine:
     verdict replaces ``n_cores`` — kout/spatial verdicts compile the
     program against the matching sharded backend, batch verdicts shard
     ``submit``'s microbatches.  Without ``tune`` the engine runs the
-    greedy plans on ``n_cores`` batch cores, exactly as before."""
+    greedy plans on ``n_cores`` batch cores, exactly as before.
+
+    Telemetry: the engine's counters (requests / batches / padded) live
+    in a per-engine ``obs.metrics.MetricsRegistry`` (the
+    backward-compatible ``.stats`` property reads them), and every
+    ``submit`` observes per-request latency and batch fill ratio into
+    histograms regardless of the obs flag (an observation is
+    nanoseconds).  With obs ENABLED (``obs.enable()`` / ``REPRO_OBS=1``)
+    each microbatch additionally gets an ``engine.batch`` trace span,
+    and the first batch triggers a one-off layer-at-a-time profile
+    (``obs.profile.profile_network`` — cached at ``.layer_profile``)
+    whose layer set matches the plan topology; pass ``calib`` (a fitted
+    CalibrationTable) to price the profile's predicted column on the
+    measured model and run live drift detection against ``drift_band``
+    (flagged layers land in ``.drift_events`` and in the trace)."""
 
     def __init__(self, qnet, *, batch: int = 8, n_cores: int = 1,
-                 backend: str = "pallas", tune=None):
+                 backend: str = "pallas", tune=None, calib=None,
+                 drift_band=None):
+        from repro import obs
         from repro.core.convcore import ConvCoreConfig, register_backend
         from repro.core.network import make_int8_program
         from repro.core.scheduler import MultiCoreScheduler, SchedulerConfig
@@ -155,6 +171,7 @@ class ConvNetEngine:
         self.batch = batch
         self.input_shape = qnet.plan.input_shape
         self.tune = tune
+        self.calib = calib
         tile_plans = None
         if tune is not None:
             if tune.network != qnet.plan.name:
@@ -171,13 +188,57 @@ class ConvNetEngine:
                 backend = sb.name
         else:
             self._sched = MultiCoreScheduler(SchedulerConfig(n_cores=n_cores))
-        self._program = make_int8_program(
-            qnet, ConvCoreConfig(backend=backend, int8=True),
-            tile_plans=tile_plans)
-        self.stats = {"requests": 0, "batches": 0, "padded": 0}
+        self._core_config = ConvCoreConfig(backend=backend, int8=True,
+                                           calib=calib)
+        with obs.span("engine.compile", network=qnet.plan.name,
+                      backend=backend, batch=batch):
+            self._program = make_int8_program(qnet, self._core_config,
+                                              tile_plans=tile_plans)
+        self._tile_plans = tile_plans
+        # per-engine registry: .stats must count THIS engine's traffic,
+        # not the process's (tests construct several engines)
+        self.metrics = obs.MetricsRegistry()
+        self._requests = self.metrics.counter("requests")
+        self._batches = self.metrics.counter("batches")
+        self._padded = self.metrics.counter("padded")
+        self._latency = self.metrics.histogram("request_latency_us")
+        self._fill = self.metrics.histogram(
+            "batch_fill", bounds=[i / 16 for i in range(1, 17)])
+        self.layer_profile = None         # set by the first obs'd submit
+        self.drift_events = ()
+        self._drift_band = drift_band
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Backward-compatible counter view (the old ad-hoc dict)."""
+        return {"requests": self._requests.value,
+                "batches": self._batches.value,
+                "padded": self._padded.value}
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p90/p99 (+count/mean) of per-request latency in µs."""
+        return self._latency.summary()
+
+    def _maybe_profile(self, chunk: np.ndarray):
+        """One-off layer-at-a-time profile on the first observed batch
+        (obs enabled only): the per-layer breakdown + live drift check
+        the offline measured_vs_predicted section cannot give a running
+        server."""
+        from repro.obs.profile import DriftDetector, profile_network
+        drift = None
+        if self.calib is not None:
+            drift = DriftDetector(self._drift_band) if self._drift_band \
+                else DriftDetector()
+        self.layer_profile = profile_network(
+            self.qnet, jnp.asarray(chunk), core_config=self._core_config,
+            tile_plans=self._tile_plans, calib=self.calib, drift=drift)
+        self.drift_events = self.layer_profile.drift
 
     def submit(self, images) -> np.ndarray:
         """images: [R, H, W, C] array or list of [H,W,C] → logits [R, K]."""
+        import time as _time
+
+        from repro import obs
         imgs = np.asarray(images, np.float32)
         if imgs.ndim == 3:
             imgs = imgs[None]
@@ -187,15 +248,28 @@ class ConvNetEngine:
         outs = []
         for lo in range(0, r, self.batch):
             chunk = imgs[lo:lo + self.batch]
-            pad = self.batch - chunk.shape[0]
+            n_real = chunk.shape[0]
+            pad = self.batch - n_real
             if pad:
                 chunk = np.concatenate(
                     [chunk, np.zeros((pad, *self.input_shape), np.float32)])
-                self.stats["padded"] += pad
-            logits = self._sched.run(self._program, jnp.asarray(chunk))
-            outs.append(np.asarray(logits)[:self.batch - pad])
-            self.stats["batches"] += 1
-        self.stats["requests"] += r
+                self._padded.inc(pad)
+            if obs.enabled() and self.layer_profile is None:
+                self._maybe_profile(chunk)
+            with obs.span("engine.batch", network=self.qnet.plan.name,
+                          fill=n_real / self.batch, padded=pad):
+                t0 = _time.perf_counter_ns()
+                logits = self._sched.run(self._program, jnp.asarray(chunk))
+                logits = np.asarray(logits)       # blocks on the result
+                batch_us = (_time.perf_counter_ns() - t0) / 1e3
+            outs.append(logits[:self.batch - pad])
+            self._batches.inc()
+            self._fill.observe(n_real / self.batch)
+            # synchronous microbatching: every request in the chunk
+            # experienced the batch's wall time
+            for _ in range(n_real):
+                self._latency.observe(batch_us)
+        self._requests.inc(r)
         if not outs:
             k = self.qnet.plan.activation_shapes()[-1][-1]
             return np.zeros((0, k), np.float32)

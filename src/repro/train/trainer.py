@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpoint import Checkpointer
 
 PyTree = Any
@@ -117,11 +118,17 @@ class Trainer:
             try:
                 self._maybe_fail(step, failed)
                 batch = self.to_device(self.pipeline.batch_at(step))
-                t0 = time.time()
-                self.state, metrics = self.train_step(self.state, batch)
-                metrics = {k: float(jax.device_get(v))
-                           for k, v in metrics.items()}
-                dt = time.time() - t0
+                # perf_counter, not time.time(): wall clock is not
+                # monotonic — an NTP step mid-step would corrupt the
+                # timing, poison the straggler EMA, and skew the
+                # histogram
+                with obs.span("trainer.step", step=step):
+                    t0 = time.perf_counter()
+                    self.state, metrics = self.train_step(self.state, batch)
+                    metrics = {k: float(jax.device_get(v))
+                               for k, v in metrics.items()}
+                    dt = time.perf_counter() - t0
+                obs.metrics.histogram("trainer.step_us").observe(dt * 1e6)
                 if self.monitor.observe(step, dt):
                     metrics["straggler"] = 1.0
                     if cfg.straggler_action == "checkpoint":
