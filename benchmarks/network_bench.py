@@ -65,6 +65,15 @@ run ALWAYS writes them into the ``train`` section of
 ``BENCH_network.json`` (so a flagless run can never silently drop the
 tracked training trajectory); ``--train`` opts the fast ``--smoke`` path
 into one train-step row as well.
+
+Serving rows (``--serving``, benchmarks/serving_load.py): sustained
+requests/s under open-loop load through the continuous-batching engine —
+sync-baseline vs saturating throughput (the ≥1.5× acceptance gate, with
+mean batch fill and zero-drop/zero-dup accounting asserted), an
+offered-load sweep at λ ∈ {0.5, 1, 2}× capacity with p50/p90/p99
+*including queue wait* and the deadline-launch fraction, and the
+multi-model LRU cache segment.  Lands as the schema-additive ``serving``
+section (smoke: lenet + multi-model; full: the zoo minus large_map).
 """
 
 from __future__ import annotations
@@ -391,8 +400,13 @@ def _dump_obs():
         emit("obs/metrics", 0.0, f"path={paths['metrics']}")
 
 
-def run(smoke: bool = False, train: bool = False):
+def run(smoke: bool = False, train: bool = False, serving: bool = False):
     rng = np.random.default_rng(3)
+    serving_rows = None
+    if serving:
+        from benchmarks.serving_load import serving_section
+        serving_rows = serving_section(np.random.default_rng(11),
+                                       smoke=smoke)
     if smoke:
         # CI fast path: LeNet + the residual-graph compiler (resnet) +
         # the grouped-conv compiler (mobilenet) with minimal iterations;
@@ -438,6 +452,8 @@ def run(smoke: bool = False, train: bool = False):
                        "latency_percentiles": _latency_section(results),
                        "pipeline": pipe_rows,
                        "measured_vs_predicted": mvp}
+            if serving_rows is not None:
+                payload["serving"] = serving_rows
             with open(OUT_PATH, "w") as f:
                 json.dump(payload, f, indent=2)
             emit("network/json", 0.0, f"path={OUT_PATH}")
@@ -508,6 +524,11 @@ def run(smoke: bool = False, train: bool = False):
         _bench_train(network.mobilenet_small(input_shape=(12, 12, 1)),
                      rng, batch=2, iters=2),
     ]
+    # serving trajectory: sustained requests/s through the continuous-
+    # batching queue (only with --serving — the open-loop sweeps add
+    # minutes of interpret-mode wall time to a flagless run)
+    if serving_rows is not None:
+        payload["serving"] = serving_rows
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     emit("network/json", 0.0, f"path={OUT_PATH}")
@@ -516,4 +537,5 @@ def run(smoke: bool = False, train: bool = False):
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run(smoke="--smoke" in sys.argv, train="--train" in sys.argv)
+    run(smoke="--smoke" in sys.argv, train="--train" in sys.argv,
+        serving="--serving" in sys.argv)

@@ -1,0 +1,320 @@
+"""Open-loop serving load generator for the continuous-batching engine.
+
+Converts the serving headline from per-call latency to sustained
+requests/s under load, per zoo network:
+
+* **Sync baseline** — the pre-queue serving idiom: every request
+  submitted alone and waited on (a padded batch-of-one program call per
+  request, strictly sequential).  This is what ``ConvNetEngine.submit``
+  did for a single-image caller before the queue existed.
+* **Saturating phase** — ≥4 submitter threads enqueue their whole share
+  at once (open-loop at infinite arrival rate) through one shared
+  engine.  This is the acceptance gate: continuous batching must
+  sustain ≥ 1.5× the sync baseline's requests/s with mean batch fill
+  ≥ 0.9 and zero dropped / duplicated / cross-wired responses (every
+  response is checked bit-exact against the reference program row).
+* **Offered-load sweep** — fixed inter-arrival submission at
+  λ ∈ {0.5, 1.0, 2.0}× the measured capacity (capacity = the
+  saturating phase's throughput).  Each point reports throughput,
+  p50/p90/p99 *including queue wait* (the honest
+  ``request_latency_us``), mean batch fill, and the deadline-launch
+  fraction — below capacity the deadline launches partial batches
+  (latency-bound), above it batches fill before the deadline
+  (throughput-bound): the throughput-vs-deadline tradeoff the README
+  table quotes.
+* **Multi-model LRU segment** — two networks round-robin through a
+  ``cache_capacity=1`` engine: evictions and recompiles must be counted
+  and the post-evict logits bit-exact with a fresh single-model engine.
+
+``large_map`` is skipped (interpret-mode batches are ~minutes; its
+model columns in the ``networks`` section remain the tracked signal).
+
+Emits the schema-additive ``serving`` section consumed by
+``benchmarks/network_bench.py --serving`` and the serving-smoke CI lane;
+with obs enabled the shared engine's metrics registry (queue-depth
+gauges, formation counters, queue-wait histograms) is exported to
+``serving_metrics.jsonl`` in ``REPRO_OBS_DIR``.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit
+from repro import obs
+from repro.core import network
+from repro.core.convcore import ConvCoreConfig
+from repro.core.network import make_int8_program
+from repro.serving.batching import ContinuousBatchingEngine
+
+SWEEP_FACTORS = (0.5, 1.0, 2.0)
+FUTURE_TIMEOUT_S = 600.0
+
+
+def _qnet(plan, rng):
+    params = plan.init_params(rng)
+    x = np.asarray(rng.normal(size=(2, *plan.input_shape)), np.float32)
+    return network.quantize_network(plan, params, x)
+
+
+def _reference_rows(program, imgs: np.ndarray, batch: int) -> np.ndarray:
+    """Ground-truth logits for every image, through the same padded
+    fixed-batch program the engine runs."""
+    rows = []
+    for lo in range(0, imgs.shape[0], batch):
+        chunk = imgs[lo:lo + batch]
+        pad = batch - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate(
+                [chunk, np.zeros((pad, *imgs.shape[1:]), np.float32)])
+        rows.append(np.asarray(program(jnp.asarray(chunk)))[:batch - pad])
+    return np.concatenate(rows)
+
+
+def _sync_baseline(program, imgs: np.ndarray, batch: int) -> float:
+    """Requests/s of the pre-queue idiom: one padded batch-of-one
+    program call per request, submitted sequentially and materialized
+    before the next is sent."""
+    pad = np.zeros((batch - 1, *imgs.shape[1:]), np.float32)
+    np.asarray(program(jnp.asarray(                       # warm the shape
+        np.concatenate([imgs[:1], pad]))))
+    t0 = time.perf_counter()
+    for i in range(imgs.shape[0]):
+        np.asarray(program(jnp.asarray(
+            np.concatenate([imgs[i:i + 1], pad]))))
+    wall = time.perf_counter() - t0
+    return imgs.shape[0] / wall
+
+
+def _saturating(eng: ContinuousBatchingEngine, model: str,
+                imgs: np.ndarray, want: np.ndarray,
+                threads: int = 4) -> Dict:
+    """Open-loop at infinite λ: every thread enqueues its whole share at
+    once.  Returns throughput + zero-drop/zero-dup accounting."""
+    shares = np.array_split(np.arange(imgs.shape[0]), threads)
+    futures: List[List] = [None] * threads
+    t_start = [0.0] * threads
+
+    def submit(t):
+        t_start[t] = time.perf_counter()
+        futures[t] = eng.submit_async(imgs[shares[t]], model=model)
+
+    ths = [threading.Thread(target=submit, args=(t,))
+           for t in range(threads)]
+    t0 = time.perf_counter()
+    for th in ths:
+        th.start()
+    for th in ths:
+        th.join(timeout=FUTURE_TIMEOUT_S)
+    results: Dict[int, np.ndarray] = {}
+    for t in range(threads):
+        for j, f in enumerate(futures[t]):
+            results[int(shares[t][j])] = f.result(
+                timeout=FUTURE_TIMEOUT_S)
+    wall = time.perf_counter() - t0
+    # zero dropped: every request index resolved exactly once; zero
+    # duplicated/cross-wired: each response bit-exact with its own row
+    dropped = imgs.shape[0] - len(results)
+    mismatched = sum(
+        0 if np.array_equal(results[i], want[i]) else 1
+        for i in results)
+    return {"requests": imgs.shape[0], "threads": threads,
+            "wall_s": wall, "rps": imgs.shape[0] / wall,
+            "dropped": dropped, "mismatched": mismatched}
+
+
+def _open_loop_point(eng: ContinuousBatchingEngine, model: str,
+                     imgs: np.ndarray, offered_rps: float,
+                     factor: float) -> Dict:
+    """One sweep point: submit at fixed inter-arrival 1/λ, wait for
+    everything, read the engine's own histograms for the answer."""
+    eng.metrics.reset()
+    interval = 1.0 / offered_rps
+    futures = []
+    t0 = time.perf_counter()
+    for i in range(imgs.shape[0]):
+        futures.append(eng.submit_async(imgs[i], model=model))
+        target = t0 + (i + 1) * interval
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+    for f in futures:
+        f.result(timeout=FUTURE_TIMEOUT_S)
+    wall = time.perf_counter() - t0
+    pct = eng.latency_percentiles()
+    fill = eng.metrics.histogram("batch_fill").summary()
+    formed = eng.formation_counts()
+    batches = max(sum(formed.values()), 1)
+    return {"lambda_x_capacity": factor,
+            "offered_rps": offered_rps,
+            "throughput_rps": imgs.shape[0] / wall,
+            "p50_us": pct["p50"], "p90_us": pct["p90"],
+            "p99_us": pct["p99"],
+            "mean_batch_fill": fill["mean"],
+            "deadline_fraction": formed["deadline"] / batches,
+            "formation": formed,
+            "queue_depth_peak":
+                eng.metrics.gauge("queue.depth.peak").value}
+
+
+def bench_serving_network(plan, rng, *, batch: int = 8,
+                          deadline_ms: float = 20.0,
+                          sat_per_thread: Optional[int] = None,
+                          sync_requests: Optional[int] = None,
+                          sweep_requests: Optional[int] = None,
+                          threads: int = 4,
+                          assert_acceptance: bool = False) -> Dict:
+    """Full serving benchmark for one network.  With
+    ``assert_acceptance`` the ISSUE-10 gate is enforced here: ≥1.5×
+    sync requests/s, mean fill ≥ 0.9, zero dropped/duplicated."""
+    sat_per_thread = sat_per_thread or 2 * batch
+    sync_requests = sync_requests or batch
+    sweep_requests = sweep_requests or 2 * batch
+    qnet = _qnet(plan, rng)
+    cfg = ConvCoreConfig(backend="pallas", int8=True)
+    program = make_int8_program(qnet, cfg)
+
+    n_sat = threads * sat_per_thread
+    imgs = rng.normal(
+        size=(max(n_sat, sweep_requests), *plan.input_shape)
+    ).astype(np.float32)
+    want = _reference_rows(program, imgs, batch)
+
+    sync_rps = _sync_baseline(program, imgs[:sync_requests], batch)
+
+    eng = ContinuousBatchingEngine(batch=batch, backend="pallas",
+                                   deadline_ms=deadline_ms)
+    try:
+        eng.add_model(qnet)
+        # warm the engine's own program (compile is eager, but the first
+        # program CALL traces) so the measured phases time serving, not
+        # jit tracing
+        eng.submit(imgs[:1])
+        eng.metrics.reset()
+        sat = _saturating(eng, plan.name, imgs[:n_sat], want, threads)
+        fill = eng.metrics.histogram("batch_fill").summary()
+        speedup = sat["rps"] / sync_rps
+        row = {"name": plan.name, "batch": batch,
+               "deadline_ms": deadline_ms,
+               "sync_rps": sync_rps,
+               "continuous_rps": sat["rps"],
+               "speedup_vs_sync": speedup,
+               "mean_batch_fill": fill["mean"],
+               "saturating": {**sat,
+                              "formation": eng.formation_counts()}}
+        if assert_acceptance:
+            assert speedup >= 1.5, (
+                f"{plan.name}: continuous batching {sat['rps']:.1f} rps "
+                f"< 1.5x sync {sync_rps:.1f} rps")
+            assert fill["mean"] >= 0.9, (
+                f"{plan.name}: mean batch fill {fill['mean']:.3f} < 0.9 "
+                "under saturating load")
+        assert sat["dropped"] == 0, (
+            f"{plan.name}: {sat['dropped']} requests dropped")
+        assert sat["mismatched"] == 0, (
+            f"{plan.name}: {sat['mismatched']} responses duplicated or "
+            "cross-wired (not bit-exact with their reference rows)")
+        # offered-load sweep around the measured capacity
+        sweep = []
+        for factor in SWEEP_FACTORS:
+            sweep.append(_open_loop_point(
+                eng, plan.name, imgs[:sweep_requests],
+                offered_rps=max(sat["rps"] * factor, 1e-6),
+                factor=factor))
+        row["sweep"] = sweep
+        emit(f"serving/{plan.name}", 0.0,
+             f"sync_rps={sync_rps:.1f};cont_rps={sat['rps']:.1f};"
+             f"speedup={speedup:.2f};fill={fill['mean']:.3f};"
+             f"dropped={sat['dropped']};mismatched={sat['mismatched']};"
+             f"deadline_frac_at_half_load={sweep[0]['deadline_fraction']:.2f}")
+        _export_engine_metrics(eng, plan.name)
+    finally:
+        eng.close()
+    return row
+
+
+def bench_multi_model(rng, *, batch: int = 4) -> Dict:
+    """LRU segment: two networks round-robin through a capacity-1
+    program cache — evictions observable, recompiled logits bit-exact
+    with a fresh single-model engine."""
+    qa = _qnet(network.lenet(input_shape=(12, 12, 1)), rng)
+    qb = _qnet(network.lenet(input_shape=(10, 10, 1)), rng)
+    imgs_a = rng.normal(size=(3, 12, 12, 1)).astype(np.float32)
+    imgs_b = rng.normal(size=(3, 10, 10, 1)).astype(np.float32)
+    eng = ContinuousBatchingEngine(batch=batch, backend="pallas",
+                                   cache_capacity=1)
+    try:
+        eng.add_model(qa, name="lenet12")
+        eng.add_model(qb, name="lenet10")
+        out_a = eng.submit(imgs_a, model="lenet12")   # recompile a
+        out_b = eng.submit(imgs_b, model="lenet10")   # recompile b
+        cache = eng.cache_stats()
+    finally:
+        eng.close()
+    fresh = ContinuousBatchingEngine(batch=batch, backend="pallas")
+    try:
+        fresh.add_model(qa, name="lenet12")
+        want_a = fresh.submit(imgs_a, model="lenet12")
+    finally:
+        fresh.close()
+    bit_exact = bool(np.array_equal(out_a, want_a))
+    assert cache["evictions"] >= 2, cache
+    assert cache["size"] <= 1 and cache["capacity"] == 1, cache
+    assert bit_exact, "post-eviction recompile changed the logits"
+    assert out_b.shape == (3, 10)
+    emit("serving/multi_model", 0.0,
+         f"evictions={cache['evictions']};misses={cache['misses']};"
+         f"hits={cache['hits']};bit_exact={int(bit_exact)}")
+    return {"cache": cache, "bit_exact": bit_exact,
+            "models": ["lenet12", "lenet10"]}
+
+
+def _export_engine_metrics(eng: ContinuousBatchingEngine,
+                           name: str) -> None:
+    """With obs on, persist the engine's per-engine registry (queue
+    gauges, formation counters, latency histograms) — the global
+    obs.dump only covers the process registry."""
+    if not obs.enabled():
+        return
+    out_dir = os.environ.get("REPRO_OBS_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "serving_metrics.jsonl")
+    eng.metrics.export_jsonl(path)
+    emit(f"serving/metrics/{name}", 0.0, f"path={path}")
+
+
+def serving_section(rng, smoke: bool = False) -> Dict:
+    """The schema-additive ``serving`` section for BENCH_network.json.
+
+    Smoke: lenet (with the acceptance gate asserted) + the multi-model
+    LRU segment.  Full: the whole zoo except large_map."""
+    if smoke:
+        nets = [(network.lenet(), True)]
+    else:
+        nets = [(network.lenet(), True),
+                (network.vgg_small(), False),
+                (network.resnet_small(), False),
+                (network.mobilenet_small(), False),
+                (network.mobilenet_v2ish(), False),
+                (network.unet_small(), False),
+                (network.dilated_context(), False)]
+    rows = [bench_serving_network(plan, rng, assert_acceptance=gate)
+            for plan, gate in nets]
+    return {
+        "batch": 8,
+        "threads": 4,
+        "sweep_factors": list(SWEEP_FACTORS),
+        "networks": rows,
+        "multi_model": bench_multi_model(rng),
+        "skipped": [
+            {"name": "large_map",
+             "reason": "interpret-mode batch is ~minutes; serving load "
+                       "generation is meaningless at that scale on CPU — "
+                       "model columns in 'networks' stay the signal"}],
+    }

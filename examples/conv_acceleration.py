@@ -145,6 +145,18 @@ def main():
     print(f"model: {rep_rn['seconds']*1e3:.3f} ms @112MHz "
           f"({rep_rn['gops_paper']:.3f} GOPS-paper; branches serialize "
           f"on the layer-at-a-time core)")
+    # the engine above is a facade over the continuous-batching queue
+    # (PR 10): async admission returns futures, a lone request launches
+    # on the deadline instead of waiting for a full batch, and the
+    # honest latency number includes its queue wait
+    fut = engine.submit_async(imgs_rn[0])
+    lone = fut.result(timeout=600)
+    np.testing.assert_array_equal(lone, logits_rn[0])
+    pct = engine.latency_percentiles()
+    print(f"continuous batching: lone async request served "
+          f"(formation {engine.engine.formation_counts()}), "
+          f"p50 enqueue-to-result {pct['p50']/1e3:.1f} ms over "
+          f"{pct['count']} requests")
 
     # --- grouped/depthwise convs: the MobileNet edge workload family.
     # Depthwise layers run the degenerate one-cin-bank sweep (one kernel

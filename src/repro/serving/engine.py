@@ -8,21 +8,24 @@ the slot index.  Finished slots (EOS or max_tokens) free immediately —
 admission latency is one decode step, the practical property continuous
 batching provides.
 
-For simplicity the reference engine prefilires per-request with batch-1
+For simplicity the reference engine prefills per-request with batch-1
 programs and scatters into the pool cache; a production engine would batch
 prefills — the scatter/cache layout already supports it.
 
 Conv-net path (``ConvNetEngine``): the image-classification analogue over
-the network executor (core/network.py).  Single-image requests are
-microbatched into one fixed-shape jitted int8 NetworkPlan program (partial
-batches zero-pad — one compiled program serves all), and the batch spreads
-over replicated IP cores via core/scheduler.py, the paper's full-board
-serving mode.
+the network executor (core/network.py).  Since PR 10 it is a facade over
+``serving/batching.py``'s :class:`ContinuousBatchingEngine`: requests are
+admitted into an async priority queue, batches form dynamically (full /
+deadline / drain), dispatch pipelines up to ``max_inflight`` batches via
+JAX async dispatch, and the batch spreads over replicated IP cores via
+core/scheduler.py, the paper's full-board serving mode.  ``submit`` keeps
+the original synchronous contract; ``submit_async`` exposes the futures.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -91,10 +94,12 @@ class ServingEngine:
         self.last_token[slot] = tok
         return True
 
-    def step(self):
-        """One lockstep decode step over the whole pool."""
+    def step(self) -> List[Request]:
+        """One lockstep decode step over the whole pool.  Returns the
+        requests that finished on this step (their slots are freed)."""
+        finished: List[Request] = []
         if all(r is None for r in self.active):
-            return
+            return finished
         tokens = jnp.asarray(self.last_token, jnp.int32)
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache,
@@ -112,168 +117,114 @@ class ServingEngine:
                     or self.pos[i] >= self.max_seq - 1:
                 req.done = True
                 self.active[i] = None
+                finished.append(req)
+        return finished
 
     def run(self, requests: List[Request]) -> List[Request]:
-        pending = list(requests)
+        # O(1) bookkeeping per step: popleft admission and finished
+        # requests moved out by step() exactly once — no per-step rescan
+        # of the full request list
+        pending = deque(requests)
         done: List[Request] = []
         while pending or any(r is not None for r in self.active):
             while pending and self._free_slots():
                 if not self.admit(pending[0]):
                     break
-                pending.pop(0)
-            self.step()
-            done.extend(r for r in requests if r.done)
-            requests = [r for r in requests if not r.done]
+                pending.popleft()
+            done.extend(self.step())
         return done
 
 
 class ConvNetEngine:
-    """Image serving over a compiled NetworkPlan int8 program.
+    """Image serving over compiled NetworkPlan int8 programs.
 
-    One fixed [batch, H, W, C] jitted program (zero-padded partial
-    batches), optionally batch-sharded over ``n_cores`` replicated IP
-    cores (core/scheduler.py — the scheduler pads ragged batches itself,
-    so ``batch`` need not divide by the core count).  ``submit`` is
-    synchronous microbatching — the conv analogue of the LM engine's
-    lockstep step.
+    A single-model facade over ``serving/batching.py``'s
+    :class:`ContinuousBatchingEngine` (which also serves multi-model —
+    use it directly for that).  Requests land in an async priority
+    queue; batches form when full, when the oldest request hits
+    ``deadline_ms``, or when a synchronous caller drains; dispatch keeps
+    up to ``max_inflight`` batches in flight on the device via JAX async
+    dispatch; partial batches zero-pad onto the one fixed
+    [batch, H, W, C] jitted program, batch-sharded over ``n_cores``
+    replicated IP cores (core/scheduler.py), the paper's full-board
+    serving mode.
 
     ``tune`` (a core/autotune.NetworkTunePlan) deploys an autotuned
     recipe end-to-end: its per-layer ``tile_plans`` thread into the
     compiled program, and its winning (scheduler mode × core count)
     verdict replaces ``n_cores`` — kout/spatial verdicts compile the
     program against the matching sharded backend, batch verdicts shard
-    ``submit``'s microbatches.  Without ``tune`` the engine runs the
-    greedy plans on ``n_cores`` batch cores, exactly as before.
+    the formed batches.  ``route=True`` additionally re-routes each
+    *formed* batch through the scheduler mode the calibrated perf model
+    predicts fastest for its actual size (``autotune.route_batch``).
 
-    Telemetry: the engine's counters (requests / batches / padded) live
-    in a per-engine ``obs.metrics.MetricsRegistry`` (the
-    backward-compatible ``.stats`` property reads them), and every
-    ``submit`` observes per-request latency and batch fill ratio into
-    histograms regardless of the obs flag (an observation is
-    nanoseconds).  With obs ENABLED (``obs.enable()`` / ``REPRO_OBS=1``)
-    each microbatch additionally gets an ``engine.batch`` trace span,
-    and the first batch triggers a one-off layer-at-a-time profile
-    (``obs.profile.profile_network`` — cached at ``.layer_profile``)
-    whose layer set matches the plan topology; pass ``calib`` (a fitted
-    CalibrationTable) to price the profile's predicted column on the
-    measured model and run live drift detection against ``drift_band``
-    (flagged layers land in ``.drift_events`` and in the trace)."""
+    Telemetry: counters (requests / batches / padded), the honest
+    enqueue→result ``request_latency_us`` histogram (queue wait
+    INCLUDED — the pre-queue batch-wall-only number lives on as
+    ``batch_device_us``), ``queue_wait_us``, ``batch_fill``, queue-depth
+    gauges, formation-reason and program-cache counters — all in the
+    per-engine ``.metrics`` registry.  With obs ENABLED
+    (``obs.enable()`` / ``REPRO_OBS=1``) compiles and batches get trace
+    spans and the first batch triggers a one-off layer-at-a-time profile
+    (``.layer_profile``; ``calib`` + ``drift_band`` arm the live drift
+    check whose hits land in ``.drift_events``)."""
 
     def __init__(self, qnet, *, batch: int = 8, n_cores: int = 1,
                  backend: str = "pallas", tune=None, calib=None,
-                 drift_band=None):
-        from repro import obs
-        from repro.core.convcore import ConvCoreConfig, register_backend
-        from repro.core.network import make_int8_program
-        from repro.core.scheduler import MultiCoreScheduler, SchedulerConfig
-
+                 drift_band=None, deadline_ms: float = 5.0,
+                 bulk_aging_ms: float = 50.0, max_inflight: int = 2,
+                 route: bool = False):
+        from repro.serving.batching import ContinuousBatchingEngine
         self.qnet = qnet
         self.batch = batch
         self.input_shape = qnet.plan.input_shape
         self.tune = tune
         self.calib = calib
-        tile_plans = None
-        if tune is not None:
-            if tune.network != qnet.plan.name:
-                raise ValueError(
-                    f"tune plan is for network {tune.network!r}, "
-                    f"engine serves {qnet.plan.name!r}")
-            tile_plans = tune.tile_plans
-            self._sched = MultiCoreScheduler.from_tune(tune)
-            if self._sched.config.mode in ("kout", "spatial"):
-                # single-image latency modes: the cores live INSIDE the
-                # program as a sharded backend, not around the batch
-                sb = self._sched.shard_backend(backend)
-                register_backend(sb)
-                backend = sb.name
-        else:
-            self._sched = MultiCoreScheduler(SchedulerConfig(n_cores=n_cores))
-        self._core_config = ConvCoreConfig(backend=backend, int8=True,
-                                           calib=calib)
-        with obs.span("engine.compile", network=qnet.plan.name,
-                      backend=backend, batch=batch):
-            self._program = make_int8_program(qnet, self._core_config,
-                                              tile_plans=tile_plans)
-        self._tile_plans = tile_plans
-        # per-engine registry: .stats must count THIS engine's traffic,
-        # not the process's (tests construct several engines)
-        self.metrics = obs.MetricsRegistry()
-        self._requests = self.metrics.counter("requests")
-        self._batches = self.metrics.counter("batches")
-        self._padded = self.metrics.counter("padded")
-        self._latency = self.metrics.histogram("request_latency_us")
-        self._fill = self.metrics.histogram(
-            "batch_fill", bounds=[i / 16 for i in range(1, 17)])
-        self.layer_profile = None         # set by the first obs'd submit
-        self.drift_events = ()
-        self._drift_band = drift_band
+        self.engine = ContinuousBatchingEngine(
+            batch=batch, n_cores=n_cores, backend=backend,
+            deadline_ms=deadline_ms, bulk_aging_ms=bulk_aging_ms,
+            cache_capacity=4, max_inflight=max_inflight, calib=calib,
+            drift_band=drift_band, route=route)
+        self.model = self.engine.add_model(qnet, tune=tune)
+
+    @property
+    def metrics(self):
+        return self.engine.metrics
 
     @property
     def stats(self) -> Dict[str, int]:
         """Backward-compatible counter view (the old ad-hoc dict)."""
-        return {"requests": self._requests.value,
-                "batches": self._batches.value,
-                "padded": self._padded.value}
+        return self.engine.stats
+
+    @property
+    def layer_profile(self):
+        return self.engine.layer_profile
+
+    @property
+    def drift_events(self):
+        return self.engine.drift_events
 
     def latency_percentiles(self) -> Dict[str, float]:
-        """p50/p90/p99 (+count/mean) of per-request latency in µs."""
-        return self._latency.summary()
+        """p50/p90/p99 (+count/mean) of per-request enqueue→result
+        latency in µs (queue wait included)."""
+        return self.engine.latency_percentiles()
 
-    def _maybe_profile(self, chunk: np.ndarray):
-        """One-off layer-at-a-time profile on the first observed batch
-        (obs enabled only): the per-layer breakdown + live drift check
-        the offline measured_vs_predicted section cannot give a running
-        server."""
-        from repro.obs.profile import DriftDetector, profile_network
-        drift = None
-        if self.calib is not None:
-            drift = DriftDetector(self._drift_band) if self._drift_band \
-                else DriftDetector()
-        self.layer_profile = profile_network(
-            self.qnet, jnp.asarray(chunk), core_config=self._core_config,
-            tile_plans=self._tile_plans, calib=self.calib, drift=drift)
-        self.drift_events = self.layer_profile.drift
+    def submit(self, images, *, priority: str = "interactive") -> np.ndarray:
+        """images: [R, H, W, C] array or list of [H,W,C] → logits [R, K].
 
-    def submit(self, images) -> np.ndarray:
-        """images: [R, H, W, C] array or list of [H,W,C] → logits [R, K]."""
-        import time as _time
+        Synchronous: enqueues all R requests atomically, drains the
+        queue, and returns logits in request order."""
+        return self.engine.submit(images, model=self.model,
+                                  priority=priority)
 
-        from repro import obs
-        imgs = np.asarray(images, np.float32)
-        if imgs.ndim == 3:
-            imgs = imgs[None]
-        r = imgs.shape[0]
-        assert imgs.shape[1:] == self.input_shape, (
-            imgs.shape, self.input_shape)
-        outs = []
-        for lo in range(0, r, self.batch):
-            chunk = imgs[lo:lo + self.batch]
-            n_real = chunk.shape[0]
-            pad = self.batch - n_real
-            if pad:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((pad, *self.input_shape), np.float32)])
-                self._padded.inc(pad)
-            if obs.enabled() and self.layer_profile is None:
-                self._maybe_profile(chunk)
-            with obs.span("engine.batch", network=self.qnet.plan.name,
-                          fill=n_real / self.batch, padded=pad):
-                t0 = _time.perf_counter_ns()
-                logits = self._sched.run(self._program, jnp.asarray(chunk))
-                logits = np.asarray(logits)       # blocks on the result
-                batch_us = (_time.perf_counter_ns() - t0) / 1e3
-            outs.append(logits[:self.batch - pad])
-            self._batches.inc()
-            self._fill.observe(n_real / self.batch)
-            # synchronous microbatching: every request in the chunk
-            # experienced the batch's wall time
-            for _ in range(n_real):
-                self._latency.observe(batch_us)
-        self._requests.inc(r)
-        if not outs:
-            k = self.qnet.plan.activation_shapes()[-1][-1]
-            return np.zeros((0, k), np.float32)
-        return np.concatenate(outs)
+    def submit_async(self, images, *, priority: str = "interactive"):
+        """Async admission — returns a Future per image (see
+        ``ContinuousBatchingEngine.submit_async``)."""
+        return self.engine.submit_async(images, model=self.model,
+                                        priority=priority)
+
+    def close(self) -> None:
+        self.engine.close()
 
 
 def _scatter_slot(pool, one, slot: int):
